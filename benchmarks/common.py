@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: CSV output + result caching.
+
+Every benchmark emits ``name,us_per_call,derived`` rows (us_per_call = mean
+wall time per objective evaluation / optimizer iteration; derived = the
+figure's headline metric) and caches its full table under
+results/benchmarks/<name>.csv so re-running ``benchmarks.run`` replays
+without recomputation (delete the CSV to force a re-run).
+"""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Iterable, List, Sequence
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_DIR = os.path.join(ROOT, "results", "benchmarks")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name + ".csv")
+
+
+def cached(name: str) -> List[List[str]]:
+    p = out_path(name)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return [row for row in csv.reader(f)][1:]
+
+
+def write_rows(name: str, header: Sequence[str],
+               rows: Iterable[Sequence]) -> List[List[str]]:
+    rows = [[str(c) for c in r] for r in rows]
+    with open(out_path(name), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return rows
+
+
+def emit(rows: Iterable[Sequence]) -> None:
+    for r in rows:
+        print(",".join(str(c) for c in r))

@@ -1,0 +1,49 @@
+"""Fig. 2 — predictive + single-cloud search methods adapted to multi-cloud.
+
+Regret vs budget for: RS, CD, CherryPick x1/x3, Bilal x1/x3; horizontal
+lines for the Ernest-style linear predictor and PARIS-style RF predictor.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached, emit, write_rows
+from repro.core.evaluate import predictive_regret, regret_curves
+from repro.multicloud import build_dataset
+
+NAME = "fig2_sota"
+METHODS = ("random", "cd", "cherrypick_x1", "cherrypick_x3",
+           "bilal_x1", "bilal_x3")
+BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
+
+
+def run(seeds=range(2), quick: bool = False):
+    rows = cached(NAME)
+    if rows:
+        return rows
+    ds = build_dataset()
+    workloads = ds.workloads[::3] if quick else ds.workloads
+    out = []
+    for target in ("cost", "time"):
+        t0 = time.time()
+        curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
+                               workloads)
+        per_iter = (time.time() - t0) / (
+            len(METHODS) * len(workloads) * len(seeds) * max(BUDGETS)) * 1e6
+        for m, c in curves.items():
+            for b, r in zip(BUDGETS, c):
+                out.append([f"fig2.{target}.{m}.B{b}",
+                            round(per_iter, 1), round(r, 4)])
+        pred = predictive_regret(ds, ("linear", "rf_paris"),
+                                 list(seeds)[:1], target, workloads)
+        for m, r in pred.items():
+            out.append([f"fig2.{target}.{m}", "", round(r, 4)])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

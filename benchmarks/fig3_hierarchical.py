@@ -1,0 +1,45 @@
+"""Fig. 3 — hierarchical AutoML optimizers + CloudBandit vs CherryPick/RS.
+
+SMAC, HyperOpt(TPE), Rising Bandits, CB-CherryPick, CB-RBFOpt, with
+CherryPick x1/x3 and RS for reference.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached, emit, write_rows
+from repro.core.evaluate import regret_curves
+from repro.multicloud import build_dataset
+
+NAME = "fig3_hierarchical"
+METHODS = ("smac", "hyperopt", "rb", "cb_cherrypick", "cb_rbfopt",
+           "cherrypick_x1", "cherrypick_x3", "random")
+BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
+
+
+def run(seeds=range(2), quick: bool = False):
+    rows = cached(NAME)
+    if rows:
+        return rows
+    ds = build_dataset()
+    workloads = ds.workloads[::3] if quick else ds.workloads
+    out = []
+    for target in ("cost", "time"):
+        t0 = time.time()
+        curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
+                               workloads)
+        per_iter = (time.time() - t0) / (
+            len(METHODS) * len(workloads) * len(seeds) * max(BUDGETS)) * 1e6
+        for m, c in curves.items():
+            for b, r in zip(BUDGETS, c):
+                out.append([f"fig3.{target}.{m}.B{b}",
+                            round(per_iter, 1), round(r, 4)])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fig. 4 — production savings analysis (B=33, N=64).
+
+Savings distributions (quartiles across the 30 workloads) for SMAC,
+CB-RBFOpt, RS and exhaustive search vs choosing a random provider+config.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached, emit, write_rows
+from repro.core.evaluate import savings_distribution
+from repro.multicloud import build_dataset
+
+NAME = "fig4_savings"
+METHODS = ("smac", "cb_rbfopt", "random", "exhaustive")
+
+
+def run(seeds=range(2), quick: bool = False):
+    rows = cached(NAME)
+    if rows:
+        return rows
+    ds = build_dataset()
+    workloads = ds.workloads[::3] if quick else ds.workloads
+    out = []
+    for target in ("cost", "time"):
+        for m in METHODS:
+            s = savings_distribution(
+                ds, m, budget=33, n_production=64, seeds=seeds,
+                target=target, workloads=workloads)
+            out.append([
+                f"fig4.{target}.{m}.median", "",
+                round(float(np.median(s)), 4)])
+            out.append([
+                f"fig4.{target}.{m}.q25", "",
+                round(float(np.percentile(s, 25)), 4)])
+            out.append([
+                f"fig4.{target}.{m}.q75", "",
+                round(float(np.percentile(s, 75)), 4)])
+            out.append([
+                f"fig4.{target}.{m}.frac_negative", "",
+                round(float(np.mean(s < 0)), 4)])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Kernel microbenchmarks.
+
+CPU wall-time here measures the *interpret-mode* kernel (a correctness
+emulator), so us_per_call compares the jnp reference against itself on CPU;
+the derived column reports the kernel's analytic FLOPs and the max |err|
+vs the oracle — the numbers that transfer to TPU are the block shapes and
+the validated math.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import cached, emit, write_rows
+from repro.kernels import ops
+from repro.kernels.ref import decode_mha_ref, mha_ref, ssd_ref
+
+NAME = "kernels"
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    rows = cached(NAME)
+    if rows:
+        return rows
+    rng = jax.random.PRNGKey(0)
+    out = []
+
+    # flash attention
+    B, Hq, Hkv, S, D = 1, 4, 2, 512, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    t_ref = _time(lambda *a: mha_ref(*a, causal=True), q, k, v)
+    t_k = _time(lambda *a: ops.flash_attention(*a, causal=True,
+                                               interpret=True), q, k, v)
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q, k, v, causal=True, interpret=True)
+        - mha_ref(q, k, v, causal=True))))
+    flops = 4 * B * Hq * S * S * D
+    out.append(["kernels.flash_attention.ref", round(t_ref, 1),
+                f"flops={flops:.2e}"])
+    out.append(["kernels.flash_attention.pallas_interpret", round(t_k, 1),
+                f"maxerr={err:.2e}"])
+
+    # ssd scan
+    B, L, H, P, N = 1, 512, 2, 64, 64
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, L, N)) * 0.3
+    Dv = jnp.ones((H,))
+    t_ref = _time(lambda *a: ssd_ref(*a, chunk=128)[0], x, dt, A, Bm, Cm, Dv)
+    t_k = _time(lambda *a: ops.ssd(*a, chunk=128, interpret=True)[0],
+                x, dt, A, Bm, Cm, Dv)
+    err = float(jnp.max(jnp.abs(
+        ops.ssd(x, dt, A, Bm, Cm, Dv, chunk=128, interpret=True)[0]
+        - ssd_ref(x, dt, A, Bm, Cm, Dv, chunk=128)[0])))
+    out.append(["kernels.ssd_scan.ref", round(t_ref, 1),
+                f"flops~{2*B*L*128*(N+P):.2e}"])
+    out.append(["kernels.ssd_scan.pallas_interpret", round(t_k, 1),
+                f"maxerr={err:.2e}"])
+
+    # decode attention
+    B, Hq, Hkv, S, D = 2, 8, 2, 2048, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    t_ref = _time(lambda *a: decode_mha_ref(*a, length=2000), q, k, v)
+    t_k = _time(lambda *a: ops.decode_attention(*a, 2000, interpret=True),
+                q, k, v)
+    err = float(jnp.max(jnp.abs(
+        ops.decode_attention(q, k, v, 2000, interpret=True)
+        - decode_mha_ref(q, k, v, length=2000))))
+    out.append(["kernels.decode_attention.ref", round(t_ref, 1),
+                f"flops={4*B*Hq*S*D:.2e}"])
+    out.append(["kernels.decode_attention.pallas_interpret", round(t_k, 1),
+                f"maxerr={err:.2e}"])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Roofline table — reads the dry-run sweep JSONs (results/dryrun/)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ROOT, emit, write_rows
+
+NAME = "roofline"
+
+
+def run(quick: bool = False):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results/dryrun/*.json"))):
+        d = json.load(open(f))
+        tag = f"roofline.{d['arch']}.{d['shape']}.{d['mesh']}"
+        if "skipped" in d:
+            out.append([tag + ".skipped", "", d["skipped"][:40]])
+            continue
+        t_us = d["t_step"] * 1e6
+        out.append([tag + ".t_step", round(t_us, 1),
+                    d["bottleneck"]])
+        out.append([tag + ".roofline_fraction", round(t_us, 1),
+                    round(d["roofline_fraction"], 4)])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Results are cached under
+results/benchmarks/; delete a CSV to force recomputation.  ``--quick``
+subsamples workloads (used for smoke runs); the full protocol (all 30
+workloads) is the default.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
+                            kernels, roofline, table2_dataset)
+    modules = [table2_dataset, fig2_sota, fig3_hierarchical, fig4_savings,
+               roofline, kernels]
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.main(quick=args.quick)
+        except Exception:
+            ok = False
+            print(f"{name}.ERROR,,failed", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Table II — offline dataset structure + spread statistics."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached, emit, write_rows
+from repro.multicloud import build_dataset
+
+NAME = "table2_dataset"
+
+
+def run(quick: bool = False):
+    rows = cached(NAME)
+    if rows:
+        return rows
+    ds = build_dataset()
+    out = [
+        ["table2.n_workloads", "", len(ds.workloads)],
+        ["table2.n_targets", "", 2],
+        ["table2.n_tasks", "", len(ds.tasks)],
+        ["table2.n_configs", "", ds.domain.size()],
+    ]
+    for prov in ds.domain.provider_names:
+        out.append([f"table2.configs.{prov}", "",
+                    len(ds.domain.inner_candidates(prov))])
+    for tgt in ("cost", "time"):
+        ratios = [ds.task(w, tgt).mean_value() / ds.task(w, tgt).true_min
+                  for w in ds.workloads]
+        out.append([f"table2.{tgt}.mean_over_min.median", "",
+                    round(float(np.median(ratios)), 3)])
+        best_prov = {}
+        for w in ds.workloads:
+            p = ds.task(w, tgt).true_argmin[0]
+            best_prov[p] = best_prov.get(p, 0) + 1
+        for p, c in sorted(best_prov.items()):
+            out.append([f"table2.{tgt}.best_provider.{p}", "", c])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Beyond-paper application: CloudBandit autotunes the sharding strategy.
+
+Arms = parallelism-strategy families; one pull = one XLA compile of the
+train step under a candidate config; objective = three-term roofline step
+time.  Uses an 8-device CPU mesh + reduced model so it completes in a couple
+of minutes; the production path is ``python -m repro.tuner.autotune``.
+
+    PYTHONPATH=src python examples/autotune_mesh.py
+"""
+import dataclasses      # noqa: E402
+
+from repro.configs import REGISTRY, get_shape   # noqa: E402
+from repro.launch.mesh import make_mesh         # noqa: E402
+from repro.tuner.autotune import autotune       # noqa: E402
+from repro.tuner.objective import CompileCostObjective  # noqa: E402
+
+
+def main() -> None:
+    cfg = REGISTRY["qwen1.5-4b"].reduced()
+    shape = dataclasses.replace(get_shape("train_4k"),
+                                seq_len=128, global_batch=8)
+    mesh = make_mesh(4, 2)
+    objective = CompileCostObjective(cfg, shape, mesh, verbose=True)
+    result = autotune(cfg, shape, mesh, budget=11, driver="cb_rbfopt",
+                      objective=objective)
+    print("\nbest strategy:", result["best_strategy"])
+    print("best config:  ", result["best_config"])
+    print(f"roofline step time: {result['best_t_step']*1e3:.3f} ms "
+          f"({result['n_evals']} compiles spent)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Reproduce the paper's headline comparison on a subset (fast mode).
+
+Runs Figs. 2-4 protocol on 10 workloads x 3 seeds and prints the regret
+table + savings medians.  The full protocol is ``python -m benchmarks.run``.
+
+    PYTHONPATH=src python examples/multicloud_repro.py
+"""
+import numpy as np
+
+from repro.core.evaluate import (predictive_regret, regret_curves,
+                                 savings_distribution)
+from repro.multicloud import build_dataset
+
+
+def main() -> None:
+    ds = build_dataset()
+    wl = ds.workloads[::3]
+    seeds = range(3)
+    budgets = (11, 33, 66, 88)
+    methods = ("random", "cherrypick_x1", "cherrypick_x3", "smac",
+               "hyperopt", "cb_rbfopt")
+
+    for target in ("cost", "time"):
+        print(f"\n=== regret ({target}), budgets {budgets} ===")
+        curves = regret_curves(ds, methods, budgets, seeds, target, wl)
+        for m, c in curves.items():
+            print(f"  {m:16s} " + "  ".join(f"{x:6.3f}" for x in c))
+        pred = predictive_regret(ds, ("linear", "rf_paris"), [0], target, wl)
+        for m, r in pred.items():
+            print(f"  {m:16s} {r:6.3f}  (predictive, horizontal line)")
+
+    print("\n=== savings (B=33, N=64) ===")
+    for target in ("cost", "time"):
+        for m in ("cb_rbfopt", "smac", "random", "exhaustive"):
+            s = savings_distribution(ds, m, budget=33, n_production=64,
+                                     seeds=seeds, target=target,
+                                     workloads=wl)
+            print(f"  {target:5s} {m:12s} median={np.median(s):+.3f} "
+                  f"IQR=[{np.percentile(s, 25):+.3f}, "
+                  f"{np.percentile(s, 75):+.3f}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end training driver: a ~100M-parameter qwen-family model trained
+for a few hundred steps with checkpoint/resume, loss logging and (optional)
+int8 gradient compression.
+
+Default invocation is CPU-sized; pass --dmodel 768 --layers 12 for the full
+~100M run (slower on CPU, unchanged on a real slice):
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLMData
+from repro.models.blocks import ModelOpts
+from repro.models.model import build_model
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dmodel", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--out", default="runs/train_e2e")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-4b"),
+        n_layers=args.layers, d_model=args.dmodel,
+        n_heads=max(4, args.dmodel // 64), n_kv_heads=max(4, args.dmodel // 64),
+        head_dim=64, d_ff=args.dmodel * 3, vocab=args.vocab)
+    model = build_model(cfg)
+    n = cfg.n_params()
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab} "
+          f"-> {n/1e6:.1f}M params")
+
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch)
+    loop = TrainLoop(
+        model, data,
+        TrainLoopConfig(steps=args.steps, ckpt_every=50, out_dir=args.out,
+                        log_every=20, compress_grads=args.compress_grads,
+                        schedule_total=args.steps),
+        opts=ModelOpts(attn_chunk=min(128, args.seq), ce_chunk=128,
+                       remat="none"))
+    r = loop.run(jax.random.PRNGKey(0))
+    losses = r["losses"]
+    print(f"loss: first10={sum(losses[:10])/10:.4f} "
+          f"last10={sum(losses[-10:])/10:.4f} "
+          f"(decreased: {sum(losses[-10:]) < sum(losses[:10])})")
+    print(f"checkpoints + metrics.jsonl under {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

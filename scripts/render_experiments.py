@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Render EXPERIMENTS.md sections from recorded results
+(results/dryrun, results/dryrun_precast, results/hillclimb,
+results/benchmarks)."""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(pattern):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(ROOT, pattern))):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"], d.get("mesh", "pod"))] = d
+    return out
+
+
+def roofline_table():
+    cells = load("results/dryrun/*.json")
+    lines = [
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "bottleneck | MODEL/HLO flops | roofline frac | peak GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), d in sorted(cells.items()):
+        if "skipped" in d:
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | — | — | — | SKIP | — | — |")
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {d['t_compute']:.3f} | "
+            f"{d['t_memory']:.3f} | {d['t_collective']:.3f} | "
+            f"**{d['bottleneck']}** | {d['useful_flops_fraction']:.2f} | "
+            f"{d['roofline_fraction']:.4f} | "
+            f"{(d['peak_memory_per_chip'] or 0)/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def precast_table():
+    base = load("results/dryrun/*.json")
+    new = load("results/dryrun_precast/*.json")
+    lines = [
+        "| arch (train_4k, pod) | t_step before | after | t_coll before | "
+        "after | roofline frac before | after |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key, d in sorted(new.items()):
+        b = base.get(key)
+        if not b or "skipped" in d:
+            continue
+        lines.append(
+            f"| {key[0]} | {b['t_step']:.2f} | {d['t_step']:.2f} | "
+            f"{b['t_collective']:.2f} | {d['t_collective']:.2f} | "
+            f"{b['roofline_fraction']:.4f} | {d['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def hillclimb_section():
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results/hillclimb/*.json"))):
+        d = json.load(open(f))
+        b = d["baseline"]
+        r = d["best_report"]
+        out.append(f"### {d['arch']} × {d['shape']}  ({d['why_chosen']})\n")
+        out.append(
+            f"- baseline (fsdp_tp, pre-opt): t_step={b['t_step']:.3f}s, "
+            f"bottleneck={b['bottleneck']}, roofline={b['roofline_fraction']:.4f}")
+        out.append(
+            f"- CB-RBFOpt (B={d['budget']}, {d['n_evals']} compiles): "
+            f"**{d['best_strategy']}** {d['best_config']} → "
+            f"t_step={d['best_t_step']:.3f}s "
+            f"(**{d['speedup_vs_baseline']:.2f}×**), "
+            f"bottleneck={r['bottleneck']}, "
+            f"roofline={r['roofline_fraction']:.4f}, "
+            f"mem={r['peak_memory_per_chip']/1e9:.1f}GB")
+        out.append("- evaluation history (strategy, config → roofline s):")
+        for h in d["history"]:
+            out.append(f"    - [{h['strategy']}] {h['config']} → {h['t']:.3f}")
+        out.append("")
+    return "\n".join(out)
+
+
+def bench_csv(name):
+    p = os.path.join(ROOT, "results", "benchmarks", name + ".csv")
+    if not os.path.exists(p):
+        return "(pending)"
+    return "```\n" + open(p).read().strip() + "\n```"
+
+
+if __name__ == "__main__":
+    section = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    print({
+        "roofline": roofline_table,
+        "precast": precast_table,
+        "hillclimb": hillclimb_section,
+    }.get(section, lambda: bench_csv(section))())

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Drive the full dry-run sweep: every (arch × shape × mesh) cell as a
+subprocess (each needs the 512-device XLA flag set before jax import).
+
+Writes results/dryrun/<arch>.<shape>.<mesh>.json per cell; skips cells whose
+JSON already exists (delete a file to re-run it).  Failures are recorded to
+<cell>.err and the sweep continues.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCH_IDS, REGISTRY, shapes_for  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT = os.path.join(ROOT, "results", "dryrun")
+
+# cheapest-first ordering (by params × layers as a compile-cost proxy)
+def cost_proxy(arch):
+    c = REGISTRY[arch]
+    return c.n_params() * c.n_layers
+
+
+def cells(meshes):
+    for arch in sorted(ARCH_IDS, key=cost_proxy):
+        cfg = REGISTRY[arch]
+        for shape, reason in shapes_for(cfg):
+            for mesh in meshes:
+                yield arch, shape.name, mesh, reason
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    meshes = args.meshes.split(",")
+
+    todo = list(cells(meshes))
+    t_start = time.time()
+    for i, (arch, shape, mesh, reason) in enumerate(todo):
+        tag = f"{arch}.{shape}.{mesh}"
+        if args.only and args.only not in tag:
+            continue
+        out = os.path.join(OUT, tag + ".json")
+        err = os.path.join(OUT, tag + ".err")
+        if os.path.exists(out):
+            continue
+        if reason is not None:
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "skipped": reason}, f, indent=2)
+            print(f"[{i+1}/{len(todo)}] SKIP {tag}: {reason}", flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", out]
+        if mesh == "multipod":
+            cmd.append("--multi-pod")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        t0 = time.time()
+        print(f"[{i+1}/{len(todo)}] RUN  {tag} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout, env=env)
+        except subprocess.TimeoutExpired:
+            with open(err, "w") as f:
+                f.write("TIMEOUT")
+            print(f"    TIMEOUT after {args.timeout}s", flush=True)
+            continue
+        dt = time.time() - t0
+        if r.returncode != 0:
+            with open(err, "w") as f:
+                f.write(r.stdout[-4000:] + "\n--- stderr ---\n"
+                        + r.stderr[-8000:])
+            print(f"    FAIL ({dt:.0f}s) -> {err}", flush=True)
+        else:
+            if os.path.exists(err):
+                os.remove(err)
+            print(f"    ok ({dt:.0f}s)  total={time.time()-t_start:.0f}s",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

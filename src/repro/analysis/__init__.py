@@ -1,0 +1,5 @@
+from repro.analysis.roofline import (
+    HW, collective_bytes_from_hlo, roofline_from_compiled, RooflineReport)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_from_compiled",
+           "RooflineReport"]

@@ -1,0 +1,307 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+makes it useless for scan-over-layers models (a 40-layer stack reports ~1
+layer of FLOPs) — and the same applies to collectives issued inside scans
+(per-layer FSDP all-gathers).  This module re-derives per-chip costs from
+``compiled.as_text()``:
+
+  * the module is split into named computations,
+  * per-computation local costs: dot FLOPs from shapes + contracting dims,
+    ~1 FLOP/element for elementwise arithmetic, bytes = operands + output
+    for non-fused root ops (fusions count their operands/outputs only,
+    mirroring XLA's fusion cost model), collective output bytes by kind,
+  * call sites (fusion ``calls=``, ``while`` body/condition, ``call``,
+    ``conditional``) add callee costs, with while bodies multiplied by the
+    trip count recovered from the loop condition
+    (``constant(N)`` + ``compare(..., direction=LT)``).
+
+Validated against unrolled references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "select", "compare", "and", "or", "not", "convert", "floor", "ceil",
+    "sign", "cosine", "sine", "clamp", "remainder", "atan2", "expm1",
+    "log1p", "logistic",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _shape_bytes(text: str) -> int:
+    return sum(_numel(s) * _DTYPE_BYTES[d] for d, s in _parse_shapes(text))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    transcendental: float = 0.0
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def _bump(self, op: str, b: float) -> None:
+        self.bytes += b
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + b
+
+    def add(self, other: "Cost", mult: float = 1.0, *,
+            include_bytes: bool = True) -> None:
+        self.flops += other.flops * mult
+        if include_bytes:
+            self.bytes += other.bytes * mult
+            for k, v in other.bytes_by_op.items():
+                self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+        self.transcendental += other.transcendental * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    out_text: str                # output shape text (may be a tuple)
+    op: str
+    args: List[str]              # operand instruction names
+    attrs: str                   # trailing attribute text
+    line: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\]{},.\s\/]+?)\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+
+def _split_args(argtext: str) -> List[str]:
+    """Top-level comma split of operand list; returns operand names."""
+    args, depth, cur = [], 0, []
+    for ch in argtext:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            args.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        args.append("".join(cur).strip())
+    names = []
+    for a in args:
+        m = re.match(r"^(?:[\w\[\]{},.\s]*\s)?%?([\w.\-]+)$", a.strip())
+        names.append(m.group(1) if m else a.strip())
+    return names
+
+
+class HloCostAnalysis:
+    def __init__(self, hlo_text: str):
+        self.computations = self._split_computations(hlo_text)
+        self._cost_cache: Dict[str, Cost] = {}
+        self._parsed: Dict[str, Dict[str, Instruction]] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _split_computations(text: str) -> Dict[str, str]:
+        comps: Dict[str, List[str]] = {}
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", line)
+            if m and not line.lstrip().startswith("//"):
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                comps[cur].append(line)
+        return {k: "\n".join(v) for k, v in comps.items()}
+
+    @staticmethod
+    def _find_entry(text: str) -> Optional[str]:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        return m.group(1) if m else None
+
+    # ------------------------------------------------------------------
+    def _instructions(self, comp: str) -> Dict[str, Instruction]:
+        if comp in self._parsed:
+            return self._parsed[comp]
+        instrs: Dict[str, Instruction] = {}
+        body = self.computations.get(comp, "")
+        for line in body.splitlines():
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            m = _INSTR_RE.match(s)
+            if not m:
+                continue
+            name, out_text, op, argtext, attrs = m.groups()
+            instrs[name] = Instruction(name, out_text.strip(), op,
+                                       _split_args(argtext), attrs, s)
+        self._parsed[comp] = instrs
+        return instrs
+
+    def _out_shape(self, comp: str, name: str) -> str:
+        ins = self._instructions(comp).get(name)
+        return ins.out_text if ins else ""
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: str, ins: Instruction) -> float:
+        out_shapes = _parse_shapes(ins.out_text)
+        out_elems = sum(_numel(s) for _, s in out_shapes)
+        # contracted size from lhs shape + lhs_contracting_dims
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        lhs_shape_text = self._out_shape(comp, ins.args[0])
+        lhs_shapes = _parse_shapes(lhs_shape_text)
+        contracted = 1
+        if m and lhs_shapes:
+            dims = [int(d) for d in m.group(1).split(",") if d]
+            shape = lhs_shapes[0][1]
+            for d in dims:
+                if d < len(shape):
+                    contracted *= shape[d]
+        return 2.0 * out_elems * contracted
+
+    def _while_trip_count(self, cond_comp: str) -> float:
+        """Max s32/u32 constant compared with LT/LE in the condition."""
+        best = 1.0
+        body = self.computations.get(cond_comp, "")
+        consts = {}
+        for m in re.finditer(
+                r"%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)", body):
+            consts[m.group(1)] = int(m.group(2))
+        for m in re.finditer(
+                r"compare\(([^)]*)\),?\s*direction=(LT|LE|GT|GE)", body):
+            for name, val in consts.items():
+                if name in m.group(1):
+                    trips = val + (1 if m.group(2) in ("LE", "GE") else 0)
+                    best = max(best, float(trips))
+        if best == 1.0 and consts:
+            best = float(max(consts.values()))
+        return best
+
+    # ------------------------------------------------------------------
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._cost_cache:
+            return self._cost_cache[comp]
+        cost = Cost()
+        self._cost_cache[comp] = cost        # cycle guard
+        for ins in self._instructions(comp).values():
+            op = ins.op
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id"):
+                continue
+            coll = next((c for c in _COLLECTIVES
+                         if op in (c, c + "-start")), None)
+            if coll:
+                if op.endswith("-done"):
+                    continue
+                cost.coll[coll] += _shape_bytes(ins.out_text)
+                cost._bump(coll, 2 * _shape_bytes(ins.out_text))
+                continue
+            if op in ("while",):
+                body_m = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                if body_m:
+                    trips = self._while_trip_count(
+                        cond_m.group(1)) if cond_m else 1.0
+                    cost.add(self.computation_cost(body_m.group(1)), trips)
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "conditional", "custom-call"):
+                # XLA's fusion cost model: memory traffic = the fusion's own
+                # operands + outputs; inner ops contribute FLOPs only.
+                for m in re.finditer(
+                        r"(?:calls|to_apply|branch_computations)=\{?%?"
+                        r"([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?", ins.attrs):
+                    for callee in re.split(r",\s*%?", m.group(1)):
+                        cost.add(self.computation_cost(callee.strip("% ")),
+                                 include_bytes=(op == "call"))
+                out_b = _shape_bytes(ins.out_text)
+                in_b = sum(_shape_bytes(self._out_shape(comp, a))
+                           for a in ins.args)
+                cost._bump(op, out_b + in_b)
+                continue
+            if op == "dot":
+                cost.flops += self._dot_flops(comp, ins)
+                out_b = _shape_bytes(ins.out_text)
+                in_b = sum(_shape_bytes(self._out_shape(comp, a))
+                           for a in ins.args)
+                cost._bump("dot", out_b + in_b)
+                continue
+            if op == "convolution":
+                # rare in this codebase; approximate as dot on output elems
+                out_elems = sum(_numel(s)
+                                for _, s in _parse_shapes(ins.out_text))
+                cost.flops += 2.0 * out_elems
+                cost._bump("convolution", _shape_bytes(ins.out_text))
+                continue
+            out_b = _shape_bytes(ins.out_text)
+            if op in _ELEMENTWISE:
+                out_elems = sum(_numel(s)
+                                for _, s in _parse_shapes(ins.out_text))
+                cost.flops += out_elems
+                if op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                          "power", "logistic", "cosine", "sine"):
+                    cost.transcendental += out_elems
+            # memory traffic for materialized ops
+            if op not in ("reshape", "transpose", "broadcast", "iota",
+                          "copy-start", "copy-done"):
+                in_b = sum(_shape_bytes(self._out_shape(comp, a))
+                           for a in ins.args)
+                cost._bump(op, out_b + in_b)
+        return cost
+
+    def entry_cost(self) -> Cost:
+        if not self.entry:
+            # fall back: largest computation
+            tot = Cost()
+            for c in self.computations:
+                tot.add(self.computation_cost(c))
+            return tot
+        return self.computation_cost(self.entry)
+
+
+def analyze_compiled(compiled) -> Cost:
+    return HloCostAnalysis(compiled.as_text()).entry_cost()

@@ -1,0 +1,191 @@
+"""Three-term roofline model from a compiled (dry-run) step.
+
+    compute term    = HLO_FLOPs    / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes    / (chips × HBM_bw)
+    collective term = coll_bytes   / (chips × link_bw)
+
+``compiled.cost_analysis()`` runs on the post-partitioning module, so its
+flops/bytes are per-chip; we report ``HLO_FLOPs = per_chip × chips`` so the
+formulas above hold verbatim.  Collective bytes are not in cost_analysis —
+they are parsed from ``compiled.as_text()`` by summing the output-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (per-chip view, same convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s
+    "hbm_bw": 819e9,          # B/s
+    "ici_bw": 50e9,           # B/s per link
+    "hbm_bytes": 16e9,        # capacity
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] group in ``text`` (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes from a (post-SPMD) HLO module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = <shape> <op>(" — async ops appear as op-start/op-done;
+        # count only the -start (or the sync form) to avoid double counting.
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in _COLLECTIVES:
+            if re.search(rf"\b{op}(-start)?\(", rhs) and f"{op}-done" not in rhs:
+                # output shape = everything before the op name
+                idx = rhs.find(op)
+                out[op] += _shape_bytes(rhs[:idx])
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    peak_memory_per_chip: Optional[float]
+    model_flops: float            # 6·N_active·D tokens-based estimate
+    #: temp + args − alias: what a donation-capable backend (TPU) sees —
+    #: XLA CPU ignores donate_argnums, double-counting KV caches and
+    #: optimizer state (outputs alias donated inputs on TPU).
+    peak_memory_adjusted: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / HW["peak_flops"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / HW["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """Overlap-optimistic step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS/(chips·peak) ÷ t_step — 'MFU at the roofline'."""
+        ideal = self.model_flops / (self.chips * HW["peak_flops"])
+        return ideal / self.t_step if self.t_step else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+            "peak_memory_adjusted": self.peak_memory_adjusted,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck, "t_step": self.t_step,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D forward-only.
+
+    Decode shapes process global_batch tokens per step.
+    """
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.tokens
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        mult = 2.0
+    else:                              # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n_active * tokens
+
+
+def roofline_from_compiled(compiled, *, cfg, shape, mesh_name: str,
+                           chips: int) -> RooflineReport:
+    # trip-count-aware analysis (XLA's cost_analysis counts while bodies
+    # once — useless for scan-over-layers models; see hlo_cost.py)
+    from repro.analysis.hlo_cost import HloCostAnalysis
+    c = HloCostAnalysis(compiled.as_text()).entry_cost()
+    flops = c.flops
+    byts = c.bytes
+    coll = {k: int(v) for k, v in c.coll.items()}
+    try:
+        mem = compiled.memory_analysis()
+        temp = float(getattr(mem, "temp_size_in_bytes", 0))
+        arg = float(getattr(mem, "argument_size_in_bytes", 0))
+        out = float(getattr(mem, "output_size_in_bytes", 0))
+        alias = float(getattr(mem, "alias_size_in_bytes", 0))
+        peak = temp + arg + out - alias
+        adjusted = temp + arg - alias      # donated outputs alias on TPU
+    except Exception:
+        peak = adjusted = None
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown=coll, peak_memory_per_chip=peak,
+        model_flops=model_flops_estimate(cfg, shape),
+        peak_memory_adjusted=adjusted,
+    )

@@ -1,0 +1,141 @@
+"""Hierarchical selection-configuration domain (Eq. 1 of the paper).
+
+The outer variable selects a *provider* k ∈ K (cloud provider in the paper;
+parallelism-strategy family in the sharding autotuner); each provider has its
+own categorical parameter space X^(k); *shared* parameters (cluster size n in
+the paper; microbatch/remat in the tuner) are common to all providers.
+
+Everything is finite and enumerable — the paper's spaces are 88 configs
+total — so optimizers rank candidates instead of optimizing continuous
+acquisitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Config = Dict[str, Any]          # param name -> value
+Point = Tuple[str, Config]       # (provider name, config incl shared params)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpace:
+    name: str
+    values: Tuple[Any, ...]
+
+    @property
+    def numeric(self) -> bool:
+        return all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                   for v in self.values)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProviderSpace:
+    name: str
+    params: Tuple[ParamSpace, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    providers: Tuple[ProviderSpace, ...]
+    shared: Tuple[ParamSpace, ...] = ()
+
+    @property
+    def provider_names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.providers)
+
+    def provider(self, name: str) -> ProviderSpace:
+        for p in self.providers:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+    # ---------------- enumeration ----------------
+    def inner_candidates(self, provider: str) -> List[Config]:
+        p = self.provider(provider)
+        spaces = list(p.params) + list(self.shared)
+        names = [s.name for s in spaces]
+        out = []
+        for combo in itertools.product(*[s.values for s in spaces]):
+            out.append(dict(zip(names, combo)))
+        return out
+
+    def all_candidates(self) -> List[Point]:
+        out: List[Point] = []
+        for p in self.providers:
+            out.extend((p.name, c) for c in self.inner_candidates(p.name))
+        return out
+
+    def size(self) -> int:
+        return len(self.all_candidates())
+
+    # ---------------- encoders ----------------
+    def inner_encoder(self, provider: str) -> "Encoder":
+        p = self.provider(provider)
+        return Encoder(tuple(p.params) + tuple(self.shared))
+
+    def flat_encoder(self) -> "Encoder":
+        """Flattened-domain encoding ('x1' adaptation): provider choice +
+        shared params + the union of every provider's params (inactive
+        params encoded as NA) — exactly the structure the paper criticises.
+        """
+        spaces: List[ParamSpace] = [
+            ParamSpace("provider", self.provider_names)]
+        spaces.extend(self.shared)
+        for p in self.providers:
+            for s in p.params:
+                spaces.append(ParamSpace(f"{p.name}.{s.name}", s.values))
+        return Encoder(tuple(spaces), hierarchical_names=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Encoder:
+    """Mixed numeric / one-hot feature encoding over a finite space.
+
+    Numeric params are min-max scaled; categoricals are one-hot.  Missing
+    (inactive) params encode as all-zeros one-hot / -1 numeric — the SMAC
+    convention for conditional parameters.
+    """
+    spaces: Tuple[ParamSpace, ...]
+    hierarchical_names: bool = False
+
+    @property
+    def dim(self) -> int:
+        return sum(1 if s.numeric else len(s.values) for s in self.spaces)
+
+    def encode(self, point_or_config) -> np.ndarray:
+        if isinstance(point_or_config, tuple):
+            provider, config = point_or_config
+            cfg = dict(config)
+            cfg["provider"] = provider
+            if self.hierarchical_names:
+                prov = self_provider = provider
+                prefixed = {}
+                for k, v in config.items():
+                    prefixed[k] = v                       # shared names stay
+                    prefixed[f"{prov}.{k}"] = v           # provider-local
+                cfg.update(prefixed)
+        else:
+            cfg = dict(point_or_config)
+        feats: List[float] = []
+        for s in self.spaces:
+            val = cfg.get(s.name, None)
+            if s.numeric:
+                if val is None:
+                    feats.append(-1.0)
+                else:
+                    lo, hi = min(s.values), max(s.values)
+                    feats.append((float(val) - lo) / (hi - lo) if hi > lo
+                                 else 0.0)
+            else:
+                onehot = [0.0] * len(s.values)
+                if val is not None and val in s.values:
+                    onehot[s.values.index(val)] = 1.0
+                feats.extend(onehot)
+        return np.asarray(feats, dtype=np.float64)
+
+    def encode_many(self, items: Sequence) -> np.ndarray:
+        return np.stack([self.encode(i) for i in items])

@@ -1,0 +1,212 @@
+"""Experiment harness: the paper's evaluation protocol (Figs. 2-4).
+
+Methods are evaluated against an offline dataset task (table-lookup
+objective), for budgets B = 11..88, over many seeds; compared by *regret*
+(relative distance of the best-found value to the true minimum) and by
+production *savings* vs a random configuration (Sec. IV-E):
+
+    S = (N·R_rand − (C_opt + N·R_opt)) / (N·R_rand)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cloudbandit import CloudBandit, b1_for_budget
+from repro.core.domain import Domain
+from repro.core.optimizers import (
+    BO, RBFOpt, RandomSearch, SMACLike, TPE, cherrypick, bilal,
+    CoordinateDescent, ExhaustiveSearch)
+from repro.core.optimizers.base import History
+from repro.core.predictive import LinearPredictor, RFPredictor
+from repro.core.rising_bandits import RisingBandits
+from repro.multicloud.dataset import OfflineDataset, Task
+
+SEARCH_METHODS = (
+    "random", "cd", "exhaustive",
+    "cherrypick_x1", "cherrypick_x3", "bilal_x1", "bilal_x3",
+    "smac", "hyperopt", "rb", "cb_cherrypick", "cb_rbfopt",
+)
+PREDICTIVE_METHODS = ("linear", "rf_paris")
+
+
+def _point_objective(task: Task):
+    return lambda point: task.objective(point[0], point[1])
+
+
+def _run_flat(opt_cls, task: Task, domain: Domain, budget: int, seed: int,
+              encode=None, **kw) -> History:
+    cands = domain.all_candidates()
+    encode = encode or domain.flat_encoder().encode
+    opt = opt_cls(cands, encode, seed=seed, **kw)
+    return opt.run(_point_objective(task), budget)
+
+
+def _run_independent(factory, task: Task, domain: Domain, budget: int,
+                     seed: int, attr: bool = False) -> History:
+    """'x3' adaptation: K independent optimizers, budget split equally."""
+    from repro.multicloud.providers import attr_encode_config
+    rng = np.random.default_rng(seed)
+    hist = History()
+    provs = domain.provider_names
+    share = budget // len(provs)
+    extra = budget - share * len(provs)
+    for i, prov in enumerate(provs):
+        b = share + (1 if i < extra else 0)
+        cands = domain.inner_candidates(prov)
+        if attr:
+            enc = lambda c, _p=prov: attr_encode_config(_p, c)  # noqa: E731
+        else:
+            enc = domain.inner_encoder(prov).encode
+        opt = factory(cands, enc, seed=int(rng.integers(2 ** 31)))
+        for _ in range(b):
+            idx = opt.ask()
+            val = task.objective(prov, opt.candidates[idx])
+            opt.tell(idx, val)
+            hist.append((prov, opt.candidates[idx]), val)
+    return hist
+
+
+def run_search(method: str, task: Task, domain: Domain, budget: int,
+               seed: int) -> History:
+    target = task.target
+    if method == "random":
+        return _run_flat(RandomSearch, task, domain, budget, seed)
+    if method == "cd":
+        return _run_flat(CoordinateDescent, task, domain, budget, seed)
+    if method == "exhaustive":
+        return _run_flat(ExhaustiveSearch, task, domain,
+                         min(budget, domain.size()), seed)
+    if method == "cherrypick_x1":
+        from repro.multicloud.providers import attr_encode_point
+        return _run_flat(BO, task, domain, budget, seed,
+                         encode=attr_encode_point, surrogate="gp", acq="ei")
+    if method == "cherrypick_x3":
+        return _run_independent(cherrypick, task, domain, budget, seed,
+                                attr=True)
+    if method == "bilal_x1":
+        from repro.multicloud.providers import attr_encode_point
+        kw = dict(surrogate="gp", acq="lcb") if target == "cost" else \
+            dict(surrogate="rf", acq="pi")
+        return _run_flat(BO, task, domain, budget, seed,
+                         encode=attr_encode_point, **kw)
+    if method == "bilal_x3":
+        return _run_independent(
+            lambda c, e, seed=0: bilal(c, e, seed, target=target),
+            task, domain, budget, seed, attr=True)
+    if method == "smac":
+        return _run_flat(SMACLike, task, domain, budget, seed)
+    if method == "hyperopt":
+        cands = domain.all_candidates()
+        enc = domain.flat_encoder()
+        opt = TPE(cands, enc.encode, seed=seed, domain=domain)
+        return opt.run(_point_objective(task), budget)
+    if method == "rb":
+        rb = RisingBandits(domain, seed=seed)
+        _, _, _, hist = rb.run(task.objective, budget)
+        return hist
+    if method in ("cb_cherrypick", "cb_rbfopt"):
+        factory = cherrypick if method == "cb_cherrypick" else RBFOpt
+        b1 = b1_for_budget(budget, len(domain.provider_names))
+        cb = CloudBandit(domain, factory, b1=b1, seed=seed)
+        return cb.run(task.objective).history
+    raise ValueError(method)
+
+
+def run_predictive(method: str, task: Task, dataset: OfflineDataset,
+                   seed: int) -> Dict:
+    domain = dataset.domain
+    if method == "linear":
+        prov, cfg, _pred, evals = LinearPredictor(domain).recommend(
+            task.objective)
+    elif method == "rf_paris":
+        offline = dataset.offline_objectives(task.target, task.workload)
+        prov, cfg, _pred, evals = RFPredictor(domain, seed=seed).recommend(
+            task.objective, offline)
+    else:
+        raise ValueError(method)
+    actual = task.objective(prov, cfg)
+    return {"provider": prov, "config": cfg, "value": actual,
+            "regret": task.regret(actual), "online_evals": evals}
+
+
+# ---------------------------------------------------------------------------
+# Aggregation (Figs. 2-3): mean regret over seeds × workloads per budget
+# ---------------------------------------------------------------------------
+def regret_curves(dataset: OfflineDataset, methods: Sequence[str],
+                  budgets: Sequence[int], seeds: Sequence[int],
+                  target: str, workloads: Optional[Sequence[str]] = None
+                  ) -> Dict[str, List[float]]:
+    workloads = workloads or dataset.workloads
+    out: Dict[str, List[float]] = {}
+    max_b = max(budgets)
+    for method in methods:
+        per_budget = {b: [] for b in budgets}
+        for w in workloads:
+            task = dataset.task(w, target)
+            for seed in seeds:
+                if method in ("rb", "cb_cherrypick", "cb_rbfopt"):
+                    # trajectory depends on the total budget: one run per B
+                    for b in budgets:
+                        h = run_search(method, task, dataset.domain, b, seed)
+                        per_budget[b].append(task.regret(min(h.values)))
+                else:
+                    h = run_search(method, task, dataset.domain, max_b, seed)
+                    curve = h.best_curve()
+                    for b in budgets:
+                        per_budget[b].append(
+                            task.regret(curve[min(b, len(curve)) - 1]))
+        out[method] = [float(np.mean(per_budget[b])) for b in budgets]
+    return out
+
+
+def predictive_regret(dataset: OfflineDataset, methods: Sequence[str],
+                      seeds: Sequence[int], target: str,
+                      workloads: Optional[Sequence[str]] = None
+                      ) -> Dict[str, float]:
+    workloads = workloads or dataset.workloads
+    out = {}
+    for method in methods:
+        vals = [
+            run_predictive(method, dataset.task(w, target), dataset,
+                           seed)["regret"]
+            for w in workloads for seed in seeds
+        ]
+        out[method] = float(np.mean(vals))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Savings analysis (Fig. 4)
+# ---------------------------------------------------------------------------
+def savings_for_history(task: Task, hist: History, n_production: int
+                        ) -> float:
+    c_opt = float(np.sum(hist.values))          # one-time search expense
+    r_opt = float(np.min(hist.values))          # optimized per-run expense
+    r_rand = task.mean_value()                  # expected random expense
+    n = n_production
+    return (n * r_rand - (c_opt + n * r_opt)) / (n * r_rand)
+
+
+def savings_distribution(dataset: OfflineDataset, method: str, *,
+                         budget: int = 33, n_production: int = 64,
+                         seeds: Sequence[int] = (0,), target: str = "cost",
+                         workloads: Optional[Sequence[str]] = None
+                         ) -> np.ndarray:
+    """Per-workload savings (averaged over seeds) — the Fig. 4 box plots."""
+    workloads = workloads or dataset.workloads
+    out = []
+    for w in workloads:
+        task = dataset.task(w, target)
+        vals = []
+        for seed in seeds:
+            if method == "exhaustive":
+                h = run_search(method, task, dataset.domain,
+                               dataset.domain.size(), seed)
+            else:
+                h = run_search(method, task, dataset.domain, budget, seed)
+            vals.append(savings_for_history(task, h, n_production))
+        out.append(float(np.mean(vals)))
+    return np.asarray(out)

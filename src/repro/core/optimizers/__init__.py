@@ -1,0 +1,13 @@
+from repro.core.optimizers.base import BlackBoxOptimizer, History
+from repro.core.optimizers.random_search import (
+    RandomSearch, CoordinateDescent, ExhaustiveSearch)
+from repro.core.optimizers.bo import BO, cherrypick, bilal
+from repro.core.optimizers.smac import SMACLike
+from repro.core.optimizers.tpe import TPE
+from repro.core.optimizers.rbfopt import RBFOpt
+
+__all__ = [
+    "BlackBoxOptimizer", "History", "RandomSearch", "CoordinateDescent",
+    "ExhaustiveSearch", "BO", "cherrypick", "bilal", "SMACLike", "TPE",
+    "RBFOpt",
+]

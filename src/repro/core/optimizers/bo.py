@@ -1,0 +1,95 @@
+"""Bayesian optimization over a finite candidate set.
+
+Configurations from the paper:
+  * CherryPick [1]:  GP surrogate, Matern 5/2, EI acquisition.
+  * Bilal et al. [3]: GP + LCB for the cost target; RF + PI for time.
+  * gp-hedge: the scikit-optimize default used by Rising Bandits — per-ask
+    probabilistic choice among {EI, LCB, PI} with gains updated from
+    surrogate values at the chosen points.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+from scipy.stats import norm
+
+from repro.core.optimizers.base import BlackBoxOptimizer
+from repro.core.optimizers.gp import GP
+from repro.core.optimizers.rf import RandomForest
+
+_ACQS = ("ei", "lcb", "pi")
+
+
+def acquisition(name: str, mu, sd, best, xi: float = 0.01, kappa: float = 1.96):
+    """Return scores to MAXIMIZE (minimization objective)."""
+    if name == "lcb":
+        return -(mu - kappa * sd)
+    imp = best - mu - xi
+    z = imp / sd
+    if name == "ei":
+        return imp * norm.cdf(z) + sd * norm.pdf(z)
+    if name == "pi":
+        return norm.cdf(z)
+    raise ValueError(name)
+
+
+class BO(BlackBoxOptimizer):
+    def __init__(self, candidates, encode, seed: int = 0, *,
+                 surrogate: str = "gp", acq: str = "ei", n_init: int = 3,
+                 kappa: float = 1.96, xi: float = 0.01):
+        super().__init__(candidates, encode, seed)
+        self.surrogate_kind = surrogate
+        self.acq = acq
+        self.n_init = n_init
+        self.kappa, self.xi = kappa, xi
+        # gp-hedge state
+        self._gains = np.zeros(len(_ACQS))
+        self._last_model = None
+
+    def _fit(self):
+        X = np.stack([self.encode(p) for p in self.history.points])
+        y = np.asarray(self.history.values, float)
+        if self.surrogate_kind == "gp":
+            model = GP().fit(X, y)
+        elif self.surrogate_kind in ("rf", "et"):
+            model = RandomForest(
+                extra=(self.surrogate_kind == "et"),
+                seed=int(self.rng.integers(2**31))).fit(X, y)
+        else:
+            raise ValueError(self.surrogate_kind)
+        return model
+
+    def ask(self) -> int:
+        if len(self.history) < self.n_init:
+            return self._random_unevaluated()
+        rem = self.remaining()
+        if not rem:
+            return int(self.rng.integers(len(self.candidates)))
+        model = self._fit()
+        self._last_model = model
+        mu, sd = model.predict(self._X[rem])
+        best = min(self.history.values)
+        if self.acq == "gp_hedge":
+            probs = np.exp(self._gains - self._gains.max())
+            probs /= probs.sum()
+            pick = _ACQS[int(self.rng.choice(len(_ACQS), p=probs))]
+            scores = acquisition(pick, mu, sd, best, self.xi, self.kappa)
+            idx = rem[int(np.argmax(scores))]
+            # update hedge gains with surrogate mean at each acq's argmax
+            for i, a in enumerate(_ACQS):
+                s = acquisition(a, mu, sd, best, self.xi, self.kappa)
+                self._gains[i] -= mu[int(np.argmax(s))]
+            return idx
+        scores = acquisition(self.acq, mu, sd, best, self.xi, self.kappa)
+        return rem[int(np.argmax(scores))]
+
+
+def cherrypick(candidates, encode, seed: int = 0) -> BO:
+    return BO(candidates, encode, seed, surrogate="gp", acq="ei")
+
+
+def bilal(candidates, encode, seed: int = 0, *, target: str = "cost") -> BO:
+    if target == "cost":
+        return BO(candidates, encode, seed, surrogate="gp", acq="lcb")
+    return BO(candidates, encode, seed, surrogate="rf", acq="pi")

@@ -1,0 +1,3 @@
+from repro.distrib.logical import AxisRules, ShardCtx, P, logical_to_spec
+
+__all__ = ["AxisRules", "ShardCtx", "P", "logical_to_spec"]

@@ -1,0 +1,225 @@
+"""Logical-axis sharding: named logical axes -> physical mesh axes.
+
+Every parameter / activation in the model zoo carries *logical* axis names
+(``"embed"``, ``"ffn"``, ``"q_heads"``, ...).  A :class:`AxisRules` maps each
+logical name to zero or more physical mesh axes — this mapping IS the
+parallelism strategy, and is the inner configuration space of the sharding
+autotuner (the paper's `x` in Eq. 1).
+
+A divisibility guard drops a physical axis from a mapping when the
+corresponding dimension is not divisible by the mesh-axis size (e.g. the 504
+vocab of hubert-xlarge is replicated rather than unevenly sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Physical = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis name -> physical mesh axis (or tuple of axes, or None)."""
+    rules: Dict[str, Physical]
+
+    def get(self, name: str) -> Physical:
+        return self.rules.get(name)
+
+    def replace(self, **kw: Physical) -> "AxisRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return AxisRules(d)
+
+
+# Baseline production rules (paper-faithful default strategy "fsdp_tp"):
+#  - batch data-parallel over (pod, data)
+#  - parameters fully sharded: model-parallel over "model" on the wide dim,
+#    FSDP over "data" on the embed dim
+#  - sequence parallelism over "data" for single-sequence decode shapes
+def fsdp_tp_rules(multi_pod: bool) -> AxisRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return AxisRules({
+        "batch": dp,
+        # residual-stream sequence sharding over the TP axis ("activation
+        # sequence parallelism"): saved scan-over-layers residuals shard
+        # 256-way instead of 16-way, which is what keeps the large train
+        # shapes inside the 16 GB/chip envelope.
+        "seq": "model",
+        "kv_seq": None,
+        "embed": "data",
+        "vocab": "model",
+        "q_heads": "model",
+        "kv_heads": "model",
+        "kv_hd": "model",
+        "ffn": "model",
+        "experts": "model",
+        "inner": "model",
+        "ssm_heads": "model",
+        "ssm_hd": "model",
+        "state": None,
+        "conv": None,
+        "img": None,
+        "layers": None,
+        "act_embed": None,      # activation d_model dim
+        "act_heads": "model",   # activation head dim
+        "act_ffn": "model",
+        "act_kv_seq": None,     # KV-cache sequence dim
+        "expert_cap": None,
+    })
+
+
+def _divisible(mesh: Optional[Mesh], axes: Physical, dim: int) -> bool:
+    if mesh is None or axes is None:
+        return True
+    names = (axes,) if isinstance(axes, str) else axes
+    size = math.prod(mesh.shape[a] for a in names)
+    return dim % size == 0
+
+
+def _best_prefix(mesh: Optional[Mesh], axes: Physical, dim: int) -> Physical:
+    """Longest prefix of the axis tuple whose size divides ``dim`` —
+    e.g. batch=256 on ('pod','data','model')=512 falls back to
+    ('pod','data')=32 instead of replicating entirely."""
+    if mesh is None or axes is None:
+        return axes
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    for k in range(len(names), 0, -1):
+        if dim % math.prod(mesh.shape[a] for a in names[:k]) == 0:
+            return names[:k] if len(names[:k]) > 1 else names[0]
+    return None
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    rules: AxisRules,
+    shape: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+) -> PartitionSpec:
+    """Translate a tuple of logical axis names into a PartitionSpec."""
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical):
+        phys = rules.get(name) if name else None
+        if phys is not None and shape is not None and not _divisible(
+                mesh, phys, shape[i]):
+            phys = _best_prefix(mesh, phys, shape[i])
+        # a physical axis may appear only once in a spec
+        names = () if phys is None else (
+            (phys,) if isinstance(phys, str) else tuple(phys))
+        names = tuple(n for n in names if n not in used)
+        used.update(names)
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Threaded through model code to apply activation sharding constraints.
+
+    ``mesh=None`` (CPU tests) makes every constraint a no-op.
+    """
+    mesh: Optional[Mesh] = None
+    rules: Optional[AxisRules] = None
+
+    def constrain(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        if self.mesh is None or self.rules is None:
+            return x
+        spec = logical_to_spec(logical, self.rules, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding_for(self, logical: Sequence[Optional[str]],
+                     shape: Sequence[int]) -> Optional[NamedSharding]:
+        if self.mesh is None or self.rules is None:
+            return None
+        return NamedSharding(
+            self.mesh, logical_to_spec(logical, self.rules, shape, self.mesh))
+
+
+NOSHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Declarative parameter specs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter leaf: shape + logical axes + init scale.
+
+    ``axes`` must be the same length as ``shape``; entries may be None
+    (never sharded, e.g. scan 'layers' handled separately).
+    """
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    scale: float = 0.02
+    init: str = "normal"     # normal | zeros | ones
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_map(fn, spec):
+    """Map ``fn`` over every P leaf of a nested-dict spec."""
+    if isinstance(spec, P):
+        return fn(spec)
+    return {k: spec_map(fn, v) for k, v in spec.items()}
+
+
+def init_params(rng: jax.Array, spec, dtype=jnp.float32):
+    """Materialize parameters from a spec tree (smoke tests / real training)."""
+    leaves = []
+
+    def collect(p):
+        leaves.append(p)
+        return None
+
+    spec_map(collect, spec)
+    keys = list(jax.random.split(rng, max(1, len(leaves))))
+    it = iter(keys)
+
+    def make(p: P):
+        k = next(it)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        return (jax.random.normal(k, p.shape, dtype) * p.scale).astype(dtype)
+
+    return spec_map(make, spec)
+
+
+def abstract_params(spec, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run, no allocation."""
+    return spec_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec)
+
+
+def param_shardings(spec, ctx: ShardCtx):
+    """NamedSharding tree aligned with the param tree."""
+    return spec_map(lambda p: ctx.sharding_for(p.axes, p.shape), spec)
+
+
+def count_params(spec) -> int:
+    total = 0
+
+    def add(p):
+        nonlocal total
+        total += math.prod(p.shape)
+        return None
+
+    spec_map(add, spec)
+    return total

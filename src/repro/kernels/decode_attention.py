@@ -1,0 +1,94 @@
+"""Flash-decode — single-token attention against a long KV cache (Pallas).
+
+One query token per sequence attends to a KV cache of up to 512k positions
+(the ``long_500k`` serve shape): the KV sequence is the innermost sequential
+grid axis, with online-softmax accumulators ((G,D) f32 + (G,1) max/sum) in
+VMEM scratch, GQA folded as G query heads per KV head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, bk: int, n_kb: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)             # (bk, D)
+    length = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kb == n_kb - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, length, *, bk: int = 512,
+                     interpret: bool = False):
+    """q: (B,Hq,D) one token; k,v: (B,Hkv,S,D); attends positions < length.
+
+    -> (B,Hq,D)
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0
+    n_kb = S // bk
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Hkv, G, D)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bk=bk, n_kb=n_kb),
+        grid=(B, Hkv, n_kb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, kb: (b,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, kb: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(length, qg, k, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,102 @@
+"""Mamba2 SSD (state-space duality) chunk scan — Pallas TPU kernel.
+
+One grid step processes one (batch, head, chunk) cell: the intra-chunk
+quadratic term runs on the MXU ((Q,Q) and (Q,P) matmuls in VMEM), and the
+inter-chunk state recurrence is carried in a (P,N) f32 VMEM scratch across
+the innermost (sequential) chunk grid axis — the TPU-native replacement for
+the parallel-prefix formulation GPU implementations use (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, state_out_ref,
+            state_ref, *, Q: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    A = A_ref[0].astype(jnp.float32)                # scalar
+    Bm = B_ref[0].astype(jnp.float32)               # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)               # (Q, N)
+    Dv = D_ref[0].astype(jnp.float32)               # scalar
+
+    a = dt * A                                      # (Q,)
+    cum = jnp.cumsum(a)                             # (Q,)
+    seg = cum[:, None] - cum[None, :]               # (Q, Q)
+    tril = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Lmat = jnp.where(tril, jnp.exp(seg), 0.0)
+
+    xdt = x * dt[:, None]                           # (Q, P)
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jax.lax.dot_general(G * Lmat, xdt, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                          # (P, N)
+    y_off = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (Q, P)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)           # (Q,)
+    new_contrib = jax.lax.dot_general(
+        xdt * decay_to_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (P, N)
+    state_ref[...] = state * jnp.exp(cum[-1]) + new_contrib
+
+    y_ref[0, :, 0] = (y_diag + y_off + Dv * x).astype(y_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _flush():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: (B,L,H,P); dt: (B,L,H); A,D: (H,); Bm,Cm: (B,L,N)
+    -> (y (B,L,H,P), final_state (B,H,P,N) f32)."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    n_chunks = L // Q
+
+    grid = (B_, H, n_chunks)
+    kernel = functools.partial(_kernel, Q=Q, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B_, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return y, state

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run entry point
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import (see ``repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pod: int = 1):
+    """Elastic mesh constructor for tests / small runs / scale-down."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

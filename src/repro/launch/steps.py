@@ -1,0 +1,220 @@
+"""Step factories + input specs + sharding assembly for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation); the same
+batch structure is produced by ``repro.data.pipeline`` for real runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distrib.logical import (
+    AxisRules, ShardCtx, abstract_params, fsdp_tp_rules, logical_to_spec,
+    param_shardings, spec_map)
+from repro.models.blocks import ModelOpts
+from repro.models.model import Model, build_model, cache_axes
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Strategy -> AxisRules
+# ---------------------------------------------------------------------------
+STRATEGIES = ("fsdp_tp", "ddp_tp", "fsdp_tp_nosp", "tp_serve", "fsdp_dp")
+
+
+def make_rules(cfg: ArchConfig, shape: ShapeSpec, mesh,
+               strategy: str = "fsdp_tp") -> AxisRules:
+    multi_pod = "pod" in mesh.shape
+    rules = fsdp_tp_rules(multi_pod)
+    if strategy == "ddp_tp":
+        rules = rules.replace(embed=None)          # params replicated over data
+    elif strategy == "fsdp_tp_nosp":
+        rules = rules.replace(seq=None)            # no residual seq sharding
+    elif strategy == "tp_serve":
+        rules = rules.replace(embed=None, seq=None)
+    elif strategy == "fsdp_dp":
+        # Pure data parallelism over BOTH mesh axes + FSDP weights over
+        # 'data': activations never cross chips, the only collectives are
+        # per-layer weight all-gathers + gradient reduce-scatters.  The
+        # beyond-paper strategy that wins the dense-train cells (§Perf).
+        dp = ("pod", "data", "model") if multi_pod else ("data", "model")
+        rules = rules.replace(
+            batch=dp, seq=None, vocab=None, q_heads=None, kv_heads=None,
+            kv_hd=None, ffn=None, inner=None, ssm_heads=None, ssm_hd=None,
+            act_heads=None, act_ffn=None, experts=None)
+    # decode adaptation: single-sequence long-context shards the KV sequence
+    # instead of the (too small) batch.
+    if shape.kind == "decode":
+        data = mesh.shape.get("data", 1)
+        if shape.global_batch % data != 0:
+            rules = rules.replace(kv_seq="data", batch=None)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+    elif shape.kind == "decode":
+        batch = {"token": SDS((B, 1), jnp.int32), "pos": SDS((), jnp.int32)}
+        return batch
+    else:
+        raise ValueError(shape.kind)
+    if cfg.family == "audio":
+        batch.pop("tokens", None)
+        batch["frames"] = SDS((B, S, cfg.frame_dim), act)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = SDS((B, cfg.n_image_tokens, cfg.d_model), act)
+    return batch
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Tuple]:
+    ax: Dict[str, Tuple] = {}
+    if shape.kind in ("train", "prefill"):
+        ax["tokens"] = ("batch", "seq")
+        ax["labels"] = ("batch", "seq")
+        ax["frames"] = ("batch", "seq", None)
+        ax["image_embeds"] = ("batch", "img", "act_embed")
+    else:
+        ax["token"] = ("batch", None)
+        ax["pos"] = ()
+    return {k: v for k, v in ax.items()}
+
+
+def abstract_cache(model: Model, shape: ShapeSpec, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+def tree_shardings(axes_tree, value_tree, ctx: ShardCtx):
+    """NamedShardings for an arbitrary (axes-annotated) value tree."""
+    def one(axes, val):
+        return ctx.sharding_for(axes, val.shape)
+
+    return jax.tree.map(
+        one, axes_tree, value_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_shardings(cfg, shape, batch_sds, ctx: ShardCtx):
+    axes = batch_axes(cfg, shape)
+    return {k: ctx.sharding_for(axes[k], v.shape)
+            for k, v in batch_sds.items()}
+
+
+def cache_shardings(model: Model, cache_sds, ctx: ShardCtx):
+    axes = cache_axes(model.cfg)
+
+    def one(key):
+        def inner(path_sds):
+            return ctx.sharding_for(axes[key], path_sds.shape)
+        return inner
+
+    return {k: one(k)(v) for k, v in cache_sds.items()}
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, ctx: ShardCtx, opts: ModelOpts,
+                    ocfg: AdamWConfig = AdamWConfig(),
+                    schedule_total: int = 10_000):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, ctx, opts)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr_scale = cosine_schedule(opt_state["count"], total=schedule_total)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, ocfg, lr_scale)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, ctx: ShardCtx, opts: ModelOpts):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx, opts)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, ctx: ShardCtx, opts: ModelOpts):
+    def decode_step(params, batch, cache):
+        logits, cache = model.decode_step(params, batch, cache, ctx, opts)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# One-call assembly for the dry-run / tuner: jit-able fn + abstract args +
+# sharding trees.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LoweringPlan:
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    donate: Tuple[int, ...] = ()
+
+
+def build_plan(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               strategy: str = "fsdp_tp", opts: Optional[ModelOpts] = None,
+               rules: Optional[AxisRules] = None) -> LoweringPlan:
+    model = build_model(cfg)
+    rules = rules or make_rules(cfg, shape, mesh, strategy)
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    if opts is None:
+        # smaller attention chunks for archs whose (replicated-head) score
+        # blocks would otherwise dominate the per-chip transient footprint
+        opts = ModelOpts(attn_chunk=256 if cfg.family == "vlm" else 512)
+
+    spec = model.param_spec()
+    batch_sds = input_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, batch_sds, ctx)
+
+    if shape.kind == "train":
+        params_sds = abstract_params(spec, jnp.float32)
+        p_sh = param_shardings(spec, ctx)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        o_sh = {"m": p_sh, "v": p_sh,
+                "count": ctx.sharding_for((), ())}
+        fn = make_train_step(model, ctx, opts)
+        return LoweringPlan(fn, (params_sds, opt_sds, batch_sds),
+                            (p_sh, o_sh, b_sh), donate=(0, 1))
+
+    # serving paths use bf16 parameters
+    params_sds = abstract_params(spec, jnp.bfloat16)
+    p_sh = param_shardings(spec, ctx)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model, ctx, opts)
+        return LoweringPlan(fn, (params_sds, batch_sds), (p_sh, b_sh))
+
+    cache_sds = abstract_cache(model, shape)
+    c_sh = cache_shardings(model, cache_sds, ctx)
+    fn = make_decode_step(model, ctx, opts)
+    return LoweringPlan(fn, (params_sds, batch_sds, cache_sds),
+                        (p_sh, b_sh, c_sh), donate=(2,))

@@ -1,0 +1,286 @@
+"""Attention: GQA/MQA/MHA, causal / bidirectional / sliding-window / cross.
+
+Reference implementations are *chunked* over the query dimension (never
+materializing the full (S, S) score matrix) so that long-context shapes fit
+the per-chip memory envelope; the Pallas flash kernels in ``repro.kernels``
+are the TPU-optimized equivalents and are validated against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distrib.logical import P, ShardCtx
+from repro.models.layers import rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def attn_spec(cfg: ArchConfig, cross: bool = False) -> dict:
+    d, qd, kd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    spec = {
+        "wq": P((d, qd), ("embed", "q_heads")),
+        "wk": P((d, kd), ("embed", "kv_heads")),
+        "wv": P((d, kd), ("embed", "kv_heads")),
+        "wo": P((qd, d), ("q_heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        spec["bq"] = P((qd,), ("q_heads",), init="zeros")
+        spec["bk"] = P((kd,), ("kv_heads",), init="zeros")
+        spec["bv"] = P((kd,), ("kv_heads",), init="zeros")
+    return spec
+
+
+def project_q(p, x, cfg: ArchConfig):
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    B, S = x.shape[:2]
+    return q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+
+
+def project_kv(p, x, cfg: ArchConfig):
+    dt = x.dtype
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    B, S = x.shape[:2]
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def out_proj(p, o, cfg: ArchConfig):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"].astype(o.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked scores helper
+# ---------------------------------------------------------------------------
+def _mask(qpos, kpos, *, causal, is_global, window):
+    """(Sq, Sk) boolean allowed-mask.
+
+    ``is_global`` may be a traced scalar bool (scan-over-layers with mixed
+    local/global patterns): allowed = causal & (global | within window).
+    """
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m = kpos[None, :] <= qpos[:, None]
+    if window:
+        in_win = kpos[None, :] > (qpos[:, None] - window)
+        m = m & (in_win | is_global)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Chunked multi-head attention (full keys per query chunk)
+# ---------------------------------------------------------------------------
+def chunked_mha(
+    q: jax.Array, k: jax.Array, v: jax.Array, ctx: ShardCtx, *,
+    causal: bool = True,
+    is_global=True,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0, (Sq, chunk)
+    n = Sq // chunk
+    kpos = jnp.arange(Sk)
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    def block(qc: jax.Array, start) -> jax.Array:
+        qpos = q_offset + start + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        m = _mask(qpos, kpos, causal=causal, is_global=is_global,
+                  window=window)
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+    if n == 1:
+        o = block(qg, 0)
+    else:
+        def body(_, xs):
+            qc, start = xs
+            return None, block(qc, start)
+
+        qs = qg.reshape(B, n, chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+        starts = jnp.arange(n) * chunk
+        # flash-style: backward recomputes per-chunk scores (never stores
+        # the full (Sq, Sk) softmax across chunks)
+        _, os = jax.lax.scan(jax.checkpoint(body), None, (qs, starts))
+        o = os.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, D)
+    o = o.reshape(B, Sq, Hq, D)
+    return ctx.constrain(o, "batch", "seq", "act_heads", None)
+
+
+# ---------------------------------------------------------------------------
+# Banded (sliding-window-limited) attention — beyond-paper optimization.
+# Only the KV band that the window can reach is sliced per query chunk, so
+# masked-out compute is never issued.  Used when the whole stack segment is
+# local (see the gemma3 superblock restructuring in EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+def banded_mha(
+    q: jax.Array, k: jax.Array, v: jax.Array, ctx: ShardCtx, *,
+    window: int, q_offset: int = 0, chunk: int = 512,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0
+    n = Sq // chunk
+    band = min(Sk, _round_up(window + chunk, chunk))
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    def block(qc, start):
+        # start is the first query position of this chunk (traced).
+        qpos = q_offset + start + jnp.arange(chunk)
+        k0 = jnp.clip(q_offset + start + chunk - band, 0, Sk - band)
+        kc = jax.lax.dynamic_slice_in_dim(k, k0, band, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, k0, band, axis=1)
+        kpos = k0 + jnp.arange(band)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        causal = kpos[None, :] <= qpos[:, None]
+        in_win = kpos[None, :] > (qpos[:, None] - window)
+        s = jnp.where((causal & in_win)[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, vc)
+
+    if n == 1:
+        o = block(qg, 0)
+    else:
+        def body(_, xs):
+            qc, start = xs
+            return None, block(qc, start)
+
+        qs = qg.reshape(B, n, chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+        _, os = jax.lax.scan(jax.checkpoint(body), None,
+                             (qs, jnp.arange(n) * chunk))
+        o = os.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, D)
+    o = o.reshape(B, Sq, Hq, D)
+    return ctx.constrain(o, "batch", "seq", "act_heads", None)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode attention against a KV cache
+# ---------------------------------------------------------------------------
+def decode_mha(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, ctx: ShardCtx, *,
+    pos, is_global=True, window: int = 0,
+    k_new: Optional[jax.Array] = None, v_new: Optional[jax.Array] = None,
+) -> jax.Array:
+    """q: (B,1,Hq,D); caches: (B,Sk,Hkv,D); pos = current token position.
+
+    When ``k_new/v_new`` are given, the caches are treated as holding only
+    positions < pos and the current token's K/V enter the softmax as one
+    extra slot — this keeps the cache READ-ONLY inside scan-over-layers
+    bodies (the actual cache write is a single fused in-place
+    dynamic-update-slice after the layer scan; see Model.decode_step).
+    """
+    B, _, Hq, D = q.shape
+    _, Sk, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(Sk)
+    m = (kpos < pos) if k_new is not None else (kpos <= pos)
+    if window:
+        m = m & ((kpos > pos - window) | is_global)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    if k_new is not None:
+        s_self = jnp.einsum(
+            "bkgd,bskd->bkgs", qg, k_new.astype(q.dtype),
+            preferred_element_type=jnp.float32) * scale      # (B,Hkv,G,1)
+        s = jnp.concatenate([s, s_self], axis=-1)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    if k_new is not None:
+        o = jnp.einsum("bkgs,bskd->bkgd", p[..., :-1], v_cache) + \
+            p[..., -1:] * v_new.astype(v_cache.dtype).reshape(
+                B, Hkv, 1, D)
+        o = o.astype(v_cache.dtype)
+    else:
+        o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return o.reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# Full self-attention layer wrappers
+# ---------------------------------------------------------------------------
+def self_attention(
+    p, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx, *,
+    positions: jax.Array, is_global=True, chunk: int = 1024,
+    banded: bool = False,
+) -> jax.Array:
+    q = project_q(p, x, cfg)
+    k, v = project_kv(p, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if banded and cfg.sliding_window:
+        o = banded_mha(q, k, v, ctx, window=cfg.sliding_window, chunk=chunk)
+    else:
+        o = chunked_mha(
+            q, k, v, ctx, causal=cfg.causal, is_global=is_global,
+            window=cfg.sliding_window, chunk=chunk)
+    return out_proj(p, o, cfg)
+
+
+def cross_attention(
+    p, x: jax.Array, kv_src: jax.Array, cfg: ArchConfig, ctx: ShardCtx, *,
+    chunk: int = 1024,
+) -> jax.Array:
+    """x attends to kv_src (e.g. image-patch embeddings); no mask, no RoPE."""
+    q = project_q(p, x, cfg)
+    k, v = project_kv(p, kv_src, cfg)
+    o = chunked_mha(q, k, v, ctx, causal=False, chunk=chunk)
+    return out_proj(p, o, cfg)
+
+
+def decode_self_attention(
+    p, x: jax.Array, k_cache, v_cache, cfg: ArchConfig, ctx: ShardCtx, *,
+    pos, is_global=True,
+):
+    """One-token decode step; cache stays read-only here.
+
+    Returns (out, k_new, v_new) — the caller batches the cache write for all
+    layers into one in-place dynamic-update-slice after the layer scan.
+    """
+    B = x.shape[0]
+    q = project_q(p, x, cfg)                       # (B,1,Hq,D)
+    k_new, v_new = project_kv(p, x, cfg)           # (B,1,Hkv,D)
+    posv = jnp.full((B, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+    o = decode_mha(q, k_cache, v_cache, ctx, pos=pos,
+                   is_global=is_global, window=cfg.sliding_window,
+                   k_new=k_new, v_new=v_new)
+    return (out_proj(p, o.astype(x.dtype), cfg),
+            k_new.astype(k_cache.dtype), v_new.astype(v_cache.dtype))

@@ -1,0 +1,5 @@
+from repro.multicloud.providers import multicloud_domain, NODE_CATALOG
+from repro.multicloud.dataset import OfflineDataset, build_dataset, Task
+
+__all__ = ["multicloud_domain", "NODE_CATALOG", "OfflineDataset",
+           "build_dataset", "Task"]

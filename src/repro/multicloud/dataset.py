@@ -1,0 +1,88 @@
+"""Offline benchmark dataset: 30 workloads × 88 configs × {runtime, cost}.
+
+Collected once (seeded), then replayed: when an algorithm evaluates
+(provider, config) we read the recorded value — the paper's exact protocol
+for comparing search methods without re-running clouds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.domain import Domain
+from repro.multicloud.perfmodel import (
+    ALL_WORKLOADS, Workload, cost_model, runtime_model)
+from repro.multicloud.providers import multicloud_domain
+
+TARGETS = ("cost", "time")
+
+
+def _freeze(config: dict) -> tuple:
+    return tuple(sorted(config.items()))
+
+
+@dataclasses.dataclass
+class Task:
+    """One optimization task: (workload, target) with table-lookup objective."""
+    workload: str
+    target: str
+    table: Dict[Tuple[str, tuple], float]
+
+    def objective(self, provider: str, config: dict) -> float:
+        return self.table[(provider, _freeze(config))]
+
+    @property
+    def true_min(self) -> float:
+        return min(self.table.values())
+
+    @property
+    def true_argmin(self):
+        return min(self.table, key=self.table.get)
+
+    def mean_value(self) -> float:
+        return float(np.mean(list(self.table.values())))
+
+    def regret(self, value: float) -> float:
+        m = self.true_min
+        return (value - m) / m
+
+
+@dataclasses.dataclass
+class OfflineDataset:
+    domain: Domain
+    tasks: Dict[Tuple[str, str], Task]        # (workload, target) -> Task
+    workloads: Tuple[str, ...]
+
+    def task(self, workload: str, target: str) -> Task:
+        return self.tasks[(workload, target)]
+
+    def tasks_for_target(self, target: str) -> List[Task]:
+        return [self.tasks[(w, target)] for w in self.workloads]
+
+    def offline_objectives(self, target: str, exclude: str
+                           ) -> Dict[int, Callable]:
+        """Other-workload objectives for the PARIS-style predictor."""
+        return {
+            i: self.tasks[(w, target)].objective
+            for i, w in enumerate(self.workloads) if w != exclude
+        }
+
+
+def build_dataset(seed: int = 0) -> OfflineDataset:
+    domain = multicloud_domain()
+    rng = np.random.default_rng(seed)
+    tasks: Dict[Tuple[str, str], Task] = {}
+    names = tuple(w.name for w in ALL_WORKLOADS)
+    for w in ALL_WORKLOADS:
+        rt_table: Dict[Tuple[str, tuple], float] = {}
+        cost_table: Dict[Tuple[str, tuple], float] = {}
+        for prov in domain.provider_names:
+            for cfg in domain.inner_candidates(prov):
+                t = runtime_model(w, prov, cfg, rng)
+                rt_table[(prov, _freeze(cfg))] = t
+                cost_table[(prov, _freeze(cfg))] = cost_model(t, prov, cfg)
+        tasks[(w.name, "time")] = Task(w.name, "time", rt_table)
+        tasks[(w.name, "cost")] = Task(w.name, "cost", cost_table)
+    return OfflineDataset(domain=domain, tasks=tasks, workloads=names)

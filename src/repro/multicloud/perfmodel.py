@@ -1,0 +1,128 @@
+"""Parametric performance model behind the offline dataset.
+
+runtime(workload, provider, config) =
+      overhead(provider)
+    + serial_work · α / speed
+    + parallel_work · (1−α) / (n · vcpus · speed · eff(n))
+    + comm_cost · net(provider) · comm_scale(n)
+    + memory-pressure penalty (when the per-node share of the working set
+      exceeds node memory, the parallel part slows by the deficit ratio)
+cost = runtime · n · price/h / 3600
+
+A seeded per-(provider, task-archetype) affinity factor (±12%) models the
+systematic microarchitectural differences PARIS/Scout observe across clouds;
+lognormal noise (σ=6%) models measurement variance.  Everything is
+deterministic given the collection seed — mirroring the paper's protocol of
+collecting the dataset once and replaying it for every algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.multicloud.providers import (
+    PROVIDER_NET, PROVIDER_OVERHEAD, node_attrs)
+
+# Dask task archetypes: (work_cpu_seconds, serial_frac, comm_seconds,
+#                        mem_GB_working_set)
+TASKS: Dict[str, tuple] = {
+    "kmeans":               (2400.0, 0.03, 12.0, 6.0),
+    "linear_regression":    (1100.0, 0.05, 18.0, 8.0),
+    "logistic_regression":  (1500.0, 0.05, 30.0, 8.0),
+    "naive_bayes":          (500.0, 0.10, 10.0, 6.0),
+    "poisson_regression":   (1300.0, 0.06, 28.0, 8.0),
+    "polynomial_features":  (900.0, 0.15, 22.0, 20.0),
+    "spectral_clustering":  (4200.0, 0.18, 90.0, 14.0),
+    "quantile_transformer": (420.0, 0.25, 16.0, 7.0),
+    "standard_scaler":      (180.0, 0.35, 8.0, 5.0),
+    "xgboost":              (3000.0, 0.08, 70.0, 10.0),
+}
+
+# dataset scale multipliers (work, mem): buzz < credit < santander
+DATASETS: Dict[str, tuple] = {
+    "buzz": (0.6, 0.5),
+    "credit": (1.0, 1.0),
+    "santander": (2.2, 2.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    task: str
+    dataset: str
+
+    @property
+    def name(self) -> str:
+        return f"{self.task}@{self.dataset}"
+
+
+ALL_WORKLOADS = tuple(
+    Workload(t, d) for t in TASKS for d in DATASETS)
+
+
+def _stable_hash(key: tuple) -> int:
+    import hashlib
+    return int.from_bytes(
+        hashlib.md5(repr(key).encode()).digest()[:4], "little")
+
+
+def _affinity(provider: str, task: str, seed: int = 1234) -> float:
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, _stable_hash((provider, task))]))
+    return float(1.0 + rng.uniform(-0.12, 0.12))
+
+
+def _config_affinity(w: "Workload", provider: str, config: dict,
+                     seed: int = 4321) -> float:
+    """Per-(workload, provider, node-type) idiosyncrasy.
+
+    Real measurements (PARIS reports 15-65% relative RMSE for learned
+    predictors) show strong non-smooth interactions between workloads and VM
+    types — NUMA effects, burst credits, IO variance.  A deterministic
+    lognormal factor (σ≈0.22) over everything except the node count makes
+    the landscape comparably rugged: smooth in n, plateau-structured across
+    node types.
+    """
+    key = tuple(sorted((k, v) for k, v in config.items() if k != "nodes"))
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [seed, _stable_hash((w.task, w.dataset, provider, key))]))
+    plateau = float(np.exp(rng.normal(0.0, 0.32)))
+    rng2 = np.random.default_rng(np.random.SeedSequence(
+        [seed + 1, _stable_hash((w.task, w.dataset, provider, key,
+                                 config.get("nodes")))]))
+    jitter = float(np.exp(rng2.normal(0.0, 0.12)))
+    return plateau * jitter
+
+
+def runtime_model(w: Workload, provider: str, config: dict,
+                  rng: np.random.Generator) -> float:
+    work, alpha, comm, mem_req = TASKS[w.task]
+    wscale, mscale = DATASETS[w.dataset]
+    work, comm, mem_req = work * wscale, comm * np.sqrt(wscale), \
+        mem_req * mscale
+    n = config["nodes"]
+    vcpus, mem, _price, speed = node_attrs(provider, config)
+    speed = speed * _affinity(provider, w.task)
+
+    serial = work * alpha / speed
+    # parallel efficiency decays with node count (scheduling, skew)
+    eff = 1.0 / (1.0 + 0.10 * (n - 1))
+    parallel = work * (1 - alpha) / (n * vcpus * speed * eff)
+    # communication grows with participants
+    comm_t = comm * PROVIDER_NET[provider] * (1 + 0.6 * (n - 1))
+    # memory pressure: share of working set vs node memory (swapping cliff)
+    share = mem_req / n
+    penalty = 1.0
+    if share > mem:
+        penalty = 1.0 + 5.0 * (share / mem - 1.0)
+    t = PROVIDER_OVERHEAD[provider] + serial + parallel * penalty + comm_t
+    t *= _config_affinity(w, provider, config)
+    noise = float(np.exp(rng.normal(0.0, 0.10)))
+    return t * noise
+
+
+def cost_model(runtime_s: float, provider: str, config: dict) -> float:
+    _v, _m, price, _s = node_attrs(provider, config)
+    return runtime_s / 3600.0 * config["nodes"] * price

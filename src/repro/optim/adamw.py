@@ -1,0 +1,59 @@
+"""AdamW with global-norm clipping (pure pytree functions).
+
+Optimizer state shards exactly like the parameters (same tree structure), so
+FSDP sharding of m/v comes for free from the parameter shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """-> (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                     state["v"], grads)
+    c = count.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1 ** c)
+    vhat_scale = 1.0 / (1 - b2 ** c)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, m_, v_):
+        step = m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + cfg.eps)
+        return (p - lr * (step + cfg.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}, {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}

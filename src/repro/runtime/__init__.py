@@ -1,0 +1,5 @@
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+from repro.runtime.fault import StragglerDetector, FailureInjector
+
+__all__ = ["TrainLoop", "TrainLoopConfig", "StragglerDetector",
+           "FailureInjector"]

@@ -1,0 +1,94 @@
+"""Batched serving loop: continuous-batching-style greedy decoding.
+
+Requests (token prompts) are packed into a fixed decode batch; prompts are
+consumed token-by-token through the same ``decode_step`` used for
+generation (prefix and generation share the KV-cache path), finished
+sequences free their slot for queued requests.  This is the CPU-runnable
+counterpart of the ``decode_*`` dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distrib.logical import NOSHARD
+from repro.models.blocks import ModelOpts
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    def __init__(self, model: Model, params, *, batch_size: int = 4,
+                 max_seq: int = 256, opts: ModelOpts = ModelOpts(),
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.S = max_seq
+        self.opts = opts
+        self.eos_id = eos_id
+        self.cache = model.init_cache(batch_size, max_seq, jnp.float32)
+        self.pos = 0                       # shared position (lockstep batch)
+        self._decode = jax.jit(
+            lambda p, b, c: model.decode_step(p, b, c, NOSHARD, opts))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve a closed batch of requests to completion (greedy)."""
+        queue = list(requests)
+        active: List[Optional[Request]] = [None] * self.B
+        results: Dict[int, List[int]] = {}
+        cursor = np.zeros(self.B, np.int64)      # per-slot prompt cursor
+        token = np.zeros((self.B, 1), np.int32)
+
+        def admit():
+            for i in range(self.B):
+                if active[i] is None and queue:
+                    r = queue.pop(0)
+                    active[i] = r
+                    cursor[i] = 0
+                    token[i, 0] = r.prompt[0]
+
+        admit()
+        while any(a is not None for a in active) or queue:
+            logits, self.cache = self._decode(
+                self.params,
+                {"token": jnp.asarray(token),
+                 "pos": jnp.asarray(self.pos, jnp.int32)},
+                self.cache)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            self.pos += 1
+            for i in range(self.B):
+                r = active[i]
+                if r is None:
+                    continue
+                cursor[i] += 1
+                if cursor[i] < len(r.prompt):
+                    token[i, 0] = r.prompt[cursor[i]]    # prompt feeding
+                else:
+                    t = int(nxt[i])
+                    r.output.append(t)
+                    token[i, 0] = t
+                    if len(r.output) >= r.max_new_tokens or \
+                            (self.eos_id is not None and t == self.eos_id):
+                        results[r.rid] = list(r.output)
+                        active[i] = None
+            if self.pos >= self.S - 1:
+                for i in range(self.B):
+                    if active[i] is not None:
+                        results[active[i].rid] = list(active[i].output)
+                        active[i] = None
+                break
+            admit()
+        return results

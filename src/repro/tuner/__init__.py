@@ -1,0 +1,5 @@
+from repro.tuner.strategies import sharding_domain
+from repro.tuner.objective import CompileCostObjective
+from repro.tuner.autotune import autotune
+
+__all__ = ["sharding_domain", "CompileCostObjective", "autotune"]

@@ -1,0 +1,93 @@
+import os
+
+if __name__ == "__main__":                      # pragma: no cover
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Sharding autotuner: CloudBandit over parallelism strategies.
+
+The paper's algorithm, applied to the framework itself: arms = strategy
+families, pulls = compiles, objective = roofline step time.  SMAC and random
+search are available as alternative drivers for comparison (the same trio
+the paper benchmarks).
+
+CLI:
+    PYTHONPATH=src python -m repro.tuner.autotune --arch qwen1.5-4b \
+        --shape train_4k [--budget 11] [--driver cb_rbfopt] [--multi-pod]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+from typing import Optional     # noqa: E402
+
+from repro.configs import get_config, get_shape           # noqa: E402
+from repro.core.cloudbandit import CloudBandit, b1_for_budget  # noqa: E402
+from repro.core.optimizers import RBFOpt, SMACLike, RandomSearch, cherrypick  # noqa: E402
+from repro.tuner.objective import CompileCostObjective    # noqa: E402
+from repro.tuner.strategies import sharding_domain        # noqa: E402
+
+
+def autotune(cfg, shape, mesh, *, budget: int = 11,
+             driver: str = "cb_rbfopt", seed: int = 0,
+             objective: Optional[CompileCostObjective] = None) -> dict:
+    domain = sharding_domain(cfg, shape)
+    objective = objective or CompileCostObjective(cfg, shape, mesh)
+
+    if driver.startswith("cb_"):
+        factory = RBFOpt if driver == "cb_rbfopt" else cherrypick
+        try:
+            b1 = b1_for_budget(budget, len(domain.provider_names))
+        except ValueError:
+            b1 = 1        # clamp to CB's minimum schedule for K arms
+        cb = CloudBandit(domain, factory, b1=b1, seed=seed)
+        res = cb.run(objective)
+        best_strategy, best_config, best_t = res.provider, res.config, res.loss
+        history = res.history
+    else:
+        cls = {"smac": SMACLike, "random": RandomSearch}[driver]
+        cands = domain.all_candidates()
+        enc = domain.flat_encoder()
+        opt = cls(cands, enc.encode, seed=seed)
+        history = opt.run(lambda p: objective(p[0], p[1]), budget)
+        (best_strategy, best_config), best_t = opt.best()
+
+    _, best_report = objective.evaluate(best_strategy, best_config)
+    return {
+        "arch": cfg.name, "shape": shape.name, "driver": driver,
+        "budget": budget,
+        "best_strategy": best_strategy, "best_config": best_config,
+        "best_t_step": best_t, "best_report": best_report,
+        "n_evals": len(history),
+        "history": [
+            {"strategy": p[0], "config": p[1], "t": v}
+            for p, v in zip(history.points, history.values)
+        ],
+    }
+
+
+def main() -> None:
+    from repro.launch.mesh import make_production_mesh
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--budget", type=int, default=11)
+    ap.add_argument("--driver", default="cb_rbfopt",
+                    choices=("cb_rbfopt", "cb_cherrypick", "smac", "random"))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    result = autotune(cfg, shape, mesh, budget=args.budget,
+                      driver=args.driver, seed=args.seed)
+    print(json.dumps({k: v for k, v in result.items() if k != "history"},
+                     indent=2, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

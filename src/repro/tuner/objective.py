@@ -1,0 +1,84 @@
+"""Compile-cost objective: f_k(x) = roofline step time of the compiled cell.
+
+Each evaluation lowers + compiles the train/serve step under the candidate
+(strategy, config) and scores it with the three-term roofline from the HLO —
+an *expensive black-box evaluation* (tens of seconds to minutes), which is
+exactly the regime CloudBandit is designed for.  Configurations that exceed
+the per-chip HBM budget are penalized proportionally to the overrun (they
+are "feasible but terrible", like an undersized cloud VM, rather than
+excluded — mirroring how the paper's objective treats swapping configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.analysis.roofline import HW, roofline_from_compiled
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import mesh_chip_count
+from repro.launch.steps import build_plan, make_rules
+from repro.models.blocks import ModelOpts
+
+
+def opts_from_config(config: dict, base: Optional[ModelOpts] = None
+                     ) -> ModelOpts:
+    base = base or ModelOpts()
+    return dataclasses.replace(
+        base,
+        remat=config.get("remat", base.remat),
+        attn_chunk=int(config.get("attn_chunk", base.attn_chunk)),
+        ce_chunk=int(config.get("ce_chunk", base.ce_chunk)),
+        banded_local=bool(config.get("banded_local", base.banded_local)),
+    )
+
+
+@dataclasses.dataclass
+class CompileCostObjective:
+    cfg: ArchConfig
+    shape: ShapeSpec
+    mesh: object
+    hbm_budget: float = HW["hbm_bytes"]
+    verbose: bool = True
+
+    def __post_init__(self):
+        self._cache: Dict[Tuple, Tuple[float, dict]] = {}
+
+    def _key(self, strategy: str, config: dict) -> Tuple:
+        return (strategy, tuple(sorted(config.items())))
+
+    def evaluate(self, strategy: str, config: dict) -> Tuple[float, dict]:
+        key = self._key(strategy, config)
+        if key in self._cache:
+            return self._cache[key]
+        opts = opts_from_config(config)
+        plan = build_plan(self.cfg, self.shape, self.mesh,
+                          strategy=strategy, opts=opts)
+        with self.mesh:
+            compiled = jax.jit(
+                plan.fn, in_shardings=plan.in_shardings,
+                donate_argnums=plan.donate).lower(*plan.args).compile()
+        report = roofline_from_compiled(
+            compiled, cfg=self.cfg, shape=self.shape,
+            mesh_name="tuner", chips=mesh_chip_count(self.mesh))
+        t = report.t_step
+        # feasibility uses the donation-adjusted peak (XLA CPU ignores
+        # donate_argnums; on TPU donated outputs alias their inputs)
+        peak = report.peak_memory_adjusted \
+            or report.peak_memory_per_chip or 0.0
+        if peak > self.hbm_budget:
+            t *= (peak / self.hbm_budget) ** 2       # infeasibility penalty
+        result = report.to_dict()
+        result["objective"] = t
+        result["strategy"] = strategy
+        result["config"] = dict(config)
+        self._cache[key] = (t, result)
+        if self.verbose:
+            print(f"  eval [{strategy}] {config} -> t={t:.3f}s "
+                  f"(bottleneck={report.bottleneck}, "
+                  f"mem={peak/1e9:.1f}GB)", flush=True)
+        return t, result
+
+    def __call__(self, strategy: str, config: dict) -> float:
+        return self.evaluate(strategy, config)[0]

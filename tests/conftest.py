@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
+# only the dry-run subprocesses request 512 placeholder devices.

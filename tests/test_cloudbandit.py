@@ -1,0 +1,69 @@
+"""CloudBandit (Algorithm 1): budget accounting, elimination, composition."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cloudbandit import CloudBandit, b1_for_budget, total_budget
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.optimizers import RBFOpt, RandomSearch, cherrypick
+from repro.core.rising_bandits import RisingBandits
+
+
+def _domain(K=3):
+    provs = tuple(
+        ProviderSpace(f"p{k}", (ParamSpace("x", tuple(range(4))),))
+        for k in range(K))
+    return Domain(provs, shared=(ParamSpace("nodes", (1, 2)),))
+
+
+def _objective(base):
+    def f(provider, config):
+        k = int(provider[1:])
+        return base[k] + 0.1 * config["x"] + 0.05 * config["nodes"]
+    return f
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 5),
+       st.sampled_from([2.0, 3.0]))
+def test_total_budget_formula(b1, K, eta):
+    # B = sum_{m=1..K} (K-m+1) * b1 * eta^(m-1)
+    expect = sum((K - m + 1) * b1 * eta ** (m - 1) for m in range(1, K + 1))
+    assert total_budget(K, b1, eta) == int(expect)
+
+
+def test_b1_for_paper_budgets():
+    # K=3, eta=2 => B = 11*b1: the paper's grid 11,22,...,88
+    for b1 in range(1, 9):
+        assert total_budget(3, b1, 2.0) == 11 * b1
+        assert b1_for_budget(11 * b1, 3, 2.0) == b1
+
+
+@pytest.mark.parametrize("factory", [RandomSearch, cherrypick, RBFOpt])
+def test_cb_spends_exact_budget_and_finds_best_arm(factory):
+    d = _domain(3)
+    obj = _objective([3.0, 1.0, 2.0])     # p1 is the best provider
+    cb = CloudBandit(d, factory, b1=2, seed=0)
+    res = cb.run(obj)
+    assert len(res.history) == total_budget(3, 2, 2.0)
+    assert res.provider == "p1"
+    assert len(res.eliminated) == 2
+    # exponential budget growth: surviving arm pulled most
+    assert res.pulls["p1"] == max(res.pulls.values())
+    assert res.pulls["p1"] == 2 + 4 + 8
+
+
+def test_cb_eliminates_worst_first():
+    d = _domain(3)
+    obj = _objective([10.0, 1.0, 2.0])
+    res = CloudBandit(d, RandomSearch, b1=3, seed=1).run(obj)
+    assert res.eliminated[0][0] == "p0"
+
+
+def test_rising_bandits_budget_and_result():
+    d = _domain(3)
+    obj = _objective([3.0, 1.0, 2.0])
+    rb = RisingBandits(d, seed=0)
+    k, cfg, loss, hist = rb.run(obj, budget=24)
+    assert len(hist) == 24
+    assert loss <= 1.5

@@ -1,0 +1,136 @@
+"""Distribution layer: logical->physical rules, mini dry-run on 8 fake CPU
+devices (subprocess; the main process must keep 1 device), tuner domain."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_shape, shapes_for
+from repro.core.domain import Domain
+from repro.distrib.logical import (AxisRules, fsdp_tp_rules, logical_to_spec)
+from repro.tuner.strategies import sharding_domain
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_logical_to_spec_divisibility_guard():
+    rules = fsdp_tp_rules(multi_pod=False)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = logical_to_spec(("vocab", "embed"), rules, (504, 1280), FakeMesh())
+    assert spec[0] is None              # 504 % 16 != 0 -> replicated
+    assert spec[1] == "data"
+    spec2 = logical_to_spec(("vocab", "embed"), rules, (32000, 3584),
+                            FakeMesh())
+    assert spec2[0] == "model"
+
+
+def test_kv_head_fallback_to_head_dim():
+    rules = fsdp_tp_rules(multi_pod=False)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # kv_heads=8 indivisible -> "model" falls through to kv_hd (128)
+    spec = logical_to_spec(
+        ("layers", "batch", "kv_seq", "kv_heads", "kv_hd"), rules,
+        (32, 128, 4096, 8, 128), FakeMesh())
+    assert spec[3] is None
+    assert spec[4] == "model"
+
+
+def test_axis_used_only_once():
+    rules = AxisRules({"a": "model", "b": "model"})
+
+    class FakeMesh:
+        shape = {"model": 4}
+
+    spec = logical_to_spec(("a", "b"), rules, (8, 8), FakeMesh())
+    assert spec[0] == "model" and len(spec) == 1   # trailing None trimmed
+
+
+def test_shape_skips_match_design():
+    skips = {(c.name, s.name)
+             for c in REGISTRY.values()
+             for s, reason in shapes_for(c) if reason}
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    assert ("mamba2-130m", "long_500k") not in skips
+    assert ("zamba2-7b", "long_500k") not in skips
+    assert ("gemma3-27b", "long_500k") not in skips
+    assert ("minitron-8b", "long_500k") in skips
+    assert len(skips) == 8
+
+
+def test_tuner_domain_adapts():
+    cfg = REGISTRY["mamba2-130m"]
+    d_train = sharding_domain(cfg, get_shape("train_4k"))
+    assert "ddp_tp" in d_train.provider_names
+    # SSM arch: no attention knobs
+    for p in d_train.providers:
+        assert all(s.name != "attn_chunk" for s in p.params)
+    d_dec = sharding_domain(REGISTRY["qwen1.5-4b"], get_shape("decode_32k"))
+    assert "tp_serve" in d_dec.provider_names
+    assert d_dec.shared == ()
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8_devices():
+    """Full build_plan -> lower -> compile -> roofline on a (4,2) mesh."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, json
+        import jax
+        from repro.configs import REGISTRY, get_shape
+        from repro.launch.mesh import make_mesh, mesh_chip_count
+        from repro.launch.steps import build_plan
+        from repro.models.blocks import ModelOpts
+        from repro.analysis.roofline import roofline_from_compiled
+
+        cfg = REGISTRY["qwen1.5-4b"].reduced()
+        shape = dataclasses.replace(get_shape("train_4k"),
+                                    seq_len=128, global_batch=8)
+        mesh = make_mesh(4, 2)
+        plan = build_plan(cfg, shape, mesh,
+                          opts=ModelOpts(attn_chunk=64, ce_chunk=64))
+        with mesh:
+            compiled = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                               donate_argnums=plan.donate
+                               ).lower(*plan.args).compile()
+        r = roofline_from_compiled(compiled, cfg=cfg, shape=shape,
+                                   mesh_name="test", chips=8)
+        out = r.to_dict()
+        assert out["flops_per_chip"] > 0
+        assert out["coll_bytes_per_chip"] > 0
+        print(json.dumps({"ok": True, "bottleneck": out["bottleneck"]}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert '"ok": true' in r.stdout
+
+
+def test_sweep_results_if_present():
+    """Validate recorded dry-run sweep outputs (when the sweep has run)."""
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("sweep not run")
+    import glob
+    files = glob.glob(os.path.join(d, "*.json"))
+    assert len(files) >= 40
+    for f in files:
+        rec = json.load(open(f))
+        if "skipped" in rec:
+            continue
+        assert rec["flops_per_chip"] > 0
+        assert rec["t_step"] > 0
+        assert rec["bottleneck"] in ("compute", "memory", "collective")

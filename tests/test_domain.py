@@ -1,0 +1,67 @@
+"""Hierarchical domain + encoders (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.multicloud.providers import multicloud_domain
+
+
+@pytest.fixture(scope="module")
+def domain():
+    return multicloud_domain()
+
+
+def test_table2_sizes(domain):
+    assert len(domain.inner_candidates("aws")) == 24
+    assert len(domain.inner_candidates("azure")) == 16
+    assert len(domain.inner_candidates("gcp")) == 48
+    assert domain.size() == 88
+
+
+def test_inner_candidates_unique(domain):
+    for prov in domain.provider_names:
+        cands = domain.inner_candidates(prov)
+        keys = {tuple(sorted(c.items())) for c in cands}
+        assert len(keys) == len(cands)
+
+
+def test_flat_encoder_dims(domain):
+    enc = domain.flat_encoder()
+    X = enc.encode_many(domain.all_candidates())
+    assert X.shape == (88, enc.dim)
+    # distinct candidates must encode distinctly
+    assert len({tuple(r) for r in map(tuple, X)}) == 88
+
+
+def test_inner_encoder_roundtrip_distinct(domain):
+    for prov in domain.provider_names:
+        enc = domain.inner_encoder(prov)
+        cands = domain.inner_candidates(prov)
+        X = enc.encode_many(cands)
+        assert len({tuple(r) for r in map(tuple, X)}) == len(cands)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_random_domain_enumeration_consistent(data):
+    n_prov = data.draw(st.integers(1, 4))
+    providers = []
+    for i in range(n_prov):
+        n_par = data.draw(st.integers(1, 3))
+        params = tuple(
+            ParamSpace(f"p{i}_{j}",
+                       tuple(range(data.draw(st.integers(1, 4)))))
+            for j in range(n_par))
+        providers.append(ProviderSpace(f"prov{i}", params))
+    shared = (ParamSpace("nodes", (2, 3)),)
+    d = Domain(tuple(providers), shared)
+    total = sum(len(d.inner_candidates(p)) for p in d.provider_names)
+    assert total == d.size()
+    expect = 0
+    for p in providers:
+        n = 2
+        for s in p.params:
+            n *= len(s.values)
+        expect += n
+    assert d.size() == expect

@@ -1,0 +1,76 @@
+"""Evaluation harness invariants (hypothesis) + batched serving."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.evaluate import run_search, savings_for_history
+from repro.core.optimizers.base import History
+from repro.models.blocks import ModelOpts
+from repro.models.model import build_model
+from repro.configs import REGISTRY
+from repro.multicloud import build_dataset
+from repro.runtime.serve import BatchedServer, Request
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["random", "cd", "smac", "cb_rbfopt"]),
+       st.integers(0, 10))
+def test_history_length_equals_budget(method, seed):
+    ds = build_dataset()
+    t = ds.task("standard_scaler@buzz", "cost")
+    h = run_search(method, t, ds.domain, 11, seed)
+    assert len(h) == 11
+    assert all(v > 0 for v in h.values)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=30),
+       st.integers(1, 200))
+def test_savings_bounded_above_by_one(values, n):
+    ds = build_dataset()
+    t = ds.task("kmeans@buzz", "cost")
+    h = History()
+    for v in values:
+        h.append(("aws", {}), v)
+    s = savings_for_history(t, h, n)
+    assert s <= 1.0
+
+
+def test_more_production_runs_amortize_search(ds):
+    t = ds.task("xgboost@credit", "cost")
+    h = run_search("smac", t, ds.domain, 33, seed=0)
+    s_small = savings_for_history(t, h, 4)
+    s_large = savings_for_history(t, h, 256)
+    assert s_large > s_small       # amortization
+
+
+def test_batched_server_generates():
+    cfg = REGISTRY["qwen1.5-4b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=4)
+            for i in range(6)]
+    srv = BatchedServer(model, params, batch_size=3, max_seq=64,
+                        opts=ModelOpts(attn_chunk=32, remat="none"))
+    out = srv.run(reqs)
+    assert set(out) == {0, 1, 2, 3, 4, 5}
+    assert all(len(v) == 4 for v in out.values())
+    assert all(0 <= t < cfg.vocab for v in out.values() for t in v)
+
+
+def test_server_continuous_batching_reuses_slots():
+    cfg = REGISTRY["mamba2-130m"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = [Request(rid=i, prompt=[5, 6], max_new_tokens=2)
+            for i in range(5)]
+    srv = BatchedServer(model, params, batch_size=2, max_seq=64,
+                        opts=ModelOpts(remat="none"))
+    out = srv.run(reqs)
+    assert len(out) == 5

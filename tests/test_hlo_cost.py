@@ -1,0 +1,88 @@
+"""Trip-count-aware HLO cost analysis vs unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_cost import HloCostAnalysis
+from repro.analysis.roofline import collective_bytes_from_hlo
+
+
+def _cost(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return HloCostAnalysis(c.as_text()).entry_cost(), c
+
+
+def test_scan_flops_match_unroll():
+    def body(h, w):
+        return jnp.tanh(h @ w), None
+
+    def scanned(h, ws):
+        return jax.lax.scan(body, h, ws)[0].sum()
+
+    def unrolled(h, ws):
+        for i in range(8):
+            h = jnp.tanh(h @ ws[i])
+        return h.sum()
+
+    h = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    cs, _ = _cost(scanned, h, ws)
+    cu, _ = _cost(unrolled, h, ws)
+    expected = 8 * 2 * 128 * 256 * 256
+    assert abs(cs.flops - cu.flops) / cu.flops < 0.05
+    assert cs.flops >= expected
+    assert cs.flops < expected * 1.1
+
+
+def test_single_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c, _ = _cost(f, a, b)
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def inner(h, w):
+        return h @ w, None
+
+    def outer(h, ws):
+        def body(hh, _):
+            hh, _ = jax.lax.scan(inner, hh, ws)
+            return hh, None
+        return jax.lax.scan(body, h, None, length=3)[0].sum()
+
+    h = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    c, _ = _cost(outer, h, ws)
+    expected = 3 * 4 * 2 * 32 * 64 * 64
+    assert c.flops == pytest.approx(expected, rel=0.15)
+
+
+def test_bytes_positive_and_bounded():
+    def f(a, b):
+        return jnp.tanh(a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c, _ = _cost(f, a, b)
+    io = 3 * 256 * 256 * 4
+    assert c.bytes >= io * 0.5
+    assert c.bytes <= io * 20
+
+
+def test_collective_regex_parser():
+    hlo = """
+HloModule test
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16] parameter(0)
+  %ag = f32[64,16] all-gather(%p), dimensions={0}
+  %ar = f32[16,16] all-reduce(%p), to_apply=%add
+  ROOT %out = f32[16,16] add(%p, %p)
+}
+"""
+    coll = collective_bytes_from_hlo(hlo)
+    assert coll["all-gather"] == 64 * 16 * 4
+    assert coll["all-reduce"] == 16 * 16 * 4

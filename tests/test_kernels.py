@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode) +
+hypothesis property tests on attention invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import decode_mha_ref, mha_ref, ssd_ref
+from repro.kernels.ssd_scan import ssd_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,causal,window,dt", [
+    (2, 4, 4, 256, 64, True, 0, jnp.float32),
+    (1, 8, 2, 256, 64, True, 0, jnp.float32),
+    (1, 8, 2, 256, 64, True, 0, jnp.bfloat16),
+    (2, 4, 2, 512, 128, True, 128, jnp.float32),
+    (1, 4, 1, 256, 64, True, 0, jnp.float32),      # MQA
+    (1, 4, 4, 256, 64, False, 0, jnp.float32),     # bidirectional
+    (1, 2, 2, 384, 64, True, 0, jnp.float32),      # non-pow2 seq
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, causal, window, dt):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), dt)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dt)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dt)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=128, bk=128, interpret=True)
+    ref = mha_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dt], rtol=TOL[dt])
+
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk,dt", [
+    (2, 256, 3, 64, 32, 64, jnp.float32),
+    (1, 512, 2, 64, 64, 128, jnp.float32),
+    (2, 256, 4, 32, 16, 128, jnp.bfloat16),
+    (1, 128, 1, 16, 8, 32, jnp.float32),
+])
+def test_ssd_scan_sweep(B, L, H, P, N, chunk, dt):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), dt) * 0.5
+    dtv = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N), dt) * 0.3
+    Cm = jax.random.normal(ks[4], (B, L, N), dt) * 0.3
+    D = jnp.ones((H,))
+    y_k, s_k = ssd_scan(x, dtv, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    y_r, s_r = ssd_ref(x, dtv, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               atol=TOL[dt] * 5, rtol=TOL[dt] * 5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    """The chunked algorithm must be exact: chunk size cannot change y."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    B, L, H, P, N = 1, 256, 2, 32, 16
+    x = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    dtv = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, L, N)) * 0.3
+    D = jnp.ones((H,))
+    y64, _ = ssd_ref(x, dtv, A, Bm, Cm, D, chunk=64)
+    y256, _ = ssd_ref(x, dtv, A, Bm, Cm, D, chunk=256)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y256),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,length,dt", [
+    (2, 8, 2, 1024, 64, 1000, jnp.float32),
+    (1, 4, 4, 2048, 128, 1024, jnp.bfloat16),
+    (1, 16, 2, 1024, 64, 17, jnp.float32),   # short effective length
+])
+def test_decode_attention_sweep(B, Hq, Hkv, S, D, length, dt):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dt)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dt)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dt)
+    out = decode_attention(q, k, v, length, bk=512, interpret=True)
+    ref = decode_mha_ref(q, k, v, length=length)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dt], rtol=TOL[dt])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_attention_is_convex_combination(seed):
+    """Property: each output vector lies in the convex hull of V rows —
+    max |o| <= max |v| row-wise (softmax weights sum to 1)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    o = flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                        interpret=True)
+    assert float(jnp.max(jnp.abs(o))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_window_equals_causal_when_window_covers_seq(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    a = flash_attention(q, k, v, causal=True, window=0, interpret=True)
+    b = flash_attention(q, k, v, causal=True, window=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,86 @@
+"""Component BBO tests: every optimizer must respect budgets and improve."""
+import numpy as np
+import pytest
+
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.optimizers import (
+    BO, CoordinateDescent, ExhaustiveSearch, RBFOpt, RandomSearch, SMACLike,
+    TPE, cherrypick)
+from repro.core.optimizers.gp import GP
+from repro.core.optimizers.rf import RandomForest
+
+
+def _toy_domain():
+    return Domain((
+        ProviderSpace("a", (ParamSpace("x", (0, 1, 2, 3)),
+                            ParamSpace("y", ("u", "v")))),
+        ProviderSpace("b", (ParamSpace("z", (0, 1, 2)),)),
+    ), shared=(ParamSpace("nodes", (1, 2, 3)),))
+
+
+def _objective(point):
+    prov, cfg = point
+    base = 1.0 if prov == "a" else 2.0
+    return base + cfg.get("x", cfg.get("z", 0)) * 0.3 + cfg["nodes"] * 0.1
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (RandomSearch, {}),
+    (ExhaustiveSearch, {}),
+    (CoordinateDescent, {}),
+    (BO, dict(surrogate="gp", acq="ei")),
+    (BO, dict(surrogate="gp", acq="lcb")),
+    (BO, dict(surrogate="rf", acq="pi")),
+    (BO, dict(surrogate="gp", acq="gp_hedge")),
+    (SMACLike, {}),
+    (RBFOpt, {}),
+])
+def test_bbo_budget_and_improvement(cls, kw):
+    d = _toy_domain()
+    cands = d.all_candidates()
+    enc = d.flat_encoder()
+    opt = cls(cands, enc.encode, seed=3, **kw)
+    hist = opt.run(_objective, 20)
+    assert len(hist) == 20
+    curve = hist.best_curve()
+    assert (np.diff(curve) <= 1e-12).all()      # best-so-far monotone
+    # global min is provider a, x=0, nodes=1 -> 1.1
+    assert hist.best()[1] <= 1.5
+
+
+def test_tpe_runs_and_can_repeat():
+    d = _toy_domain()
+    opt = TPE(d.all_candidates(), d.flat_encoder().encode, seed=0, domain=d)
+    hist = opt.run(_objective, 25)
+    assert len(hist) == 25
+    assert opt.can_repeat
+    assert hist.best()[1] <= 1.6
+
+
+def test_exhaustive_covers_everything():
+    d = _toy_domain()
+    cands = d.all_candidates()
+    opt = ExhaustiveSearch(cands, d.flat_encoder().encode)
+    hist = opt.run(_objective, len(cands))
+    assert hist.best()[1] == min(_objective(c) for c in cands)
+
+
+def test_gp_interpolates():
+    rng = np.random.default_rng(0)
+    X = rng.random((20, 3))
+    y = X @ np.array([1.0, -2.0, 0.5]) + 0.3
+    gp = GP(noise=1e-6).fit(X, y)
+    mu, sd = gp.predict(X)
+    assert np.max(np.abs(mu - y)) < 0.05
+    Xq = rng.random((5, 3))
+    mu_q, sd_q = gp.predict(Xq)
+    assert (sd_q >= 0).all()
+
+
+def test_rf_fits_plateaus():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 2, size=(60, 4)).astype(float)
+    y = 3.0 * X[:, 0] + 1.0 * X[:, 2]
+    rf = RandomForest(n_trees=20, seed=1).fit(X, y)
+    mu, sd = rf.predict(X)
+    assert np.mean(np.abs(mu - y)) < 0.5

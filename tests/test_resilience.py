@@ -1,0 +1,130 @@
+"""Checkpoint/restart, elastic restore, failure injection, compression,
+straggler detection, data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, prune_checkpoints,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs import REGISTRY
+from repro.data.pipeline import SyntheticLMData
+from repro.models.blocks import ModelOpts
+from repro.models.model import build_model
+from repro.optim.compress import (compress_grads, compression_ratio,
+                                  init_error_feedback)
+from repro.runtime.fault import (FailureInjector, SimulatedCrash,
+                                 StragglerDetector)
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+
+def _loop(tmp, steps=8, fail=None, compress=False):
+    cfg = REGISTRY["qwen1.5-4b"].reduced()
+    model = build_model(cfg)
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=2)
+    return TrainLoop(
+        model, data,
+        TrainLoopConfig(steps=steps, ckpt_every=4, out_dir=str(tmp),
+                        log_every=4, compress_grads=compress),
+        opts=ModelOpts(attn_chunk=32, ce_chunk=32, remat="none"),
+        failure=fail)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)},
+            "count": jnp.array(7)}
+    p = save_checkpoint(str(tmp_path), 5, tree)
+    assert os.path.basename(p) == "step_00000005"
+    assert latest_step(str(tmp_path)) == 5
+    like = jax.eval_shape(lambda: tree)
+    back = restore_checkpoint(str(tmp_path), 5, like)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_prune(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree)
+    prune_checkpoints(str(tmp_path), keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    assert len(os.listdir(tmp_path)) == 2
+
+
+def test_crash_and_exact_resume(tmp_path):
+    # uninterrupted run
+    r_full = _loop(tmp_path / "full", steps=8).run()
+    # crash at step 6, then auto-resume from the step-4 checkpoint
+    crash = _loop(tmp_path / "crash", steps=8,
+                  fail=FailureInjector(fail_at_steps=(6,)))
+    with pytest.raises(SimulatedCrash):
+        crash.run()
+    resumed = _loop(tmp_path / "crash", steps=8).run()
+    # states agree exactly: same data (stateless-by-step) + same updates
+    for x, y in zip(jax.tree.leaves(r_full["state"]["params"]),
+                    jax.tree.leaves(resumed["state"]["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Save unsharded, restore under an explicit (new) sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, PartitionSpec("data", None))}
+    like = jax.eval_shape(lambda: tree)
+    back = restore_checkpoint(str(tmp_path), 1, like, sh)
+    assert back["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_grad_compression_error_feedback():
+    g = {"w": jnp.array([0.11, -0.52, 0.003, 1.5]),
+         "b": jnp.array([2.0, -1.0])}
+    err = init_error_feedback(g)
+    total = jax.tree.map(jnp.zeros_like, g)
+    # accumulated dequantized grads converge to accumulated true grads
+    for _ in range(50):
+        deq, err = compress_grads(g, err)
+        total = jax.tree.map(lambda t, d: t + d, total, deq)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(total[k]) / 50,
+                                   np.asarray(g[k]), rtol=0.02, atol=0.01)
+    # wire ratio ~4x for f32 at realistic leaf sizes (per-leaf f32 scale)
+    big = {"w": jnp.ones((1024, 256))}
+    assert compression_ratio(big) > 3.9
+
+
+def test_training_with_compression_converges(tmp_path):
+    r = _loop(tmp_path, steps=10, compress=True).run()
+    assert np.isfinite(r["losses"]).all()
+
+
+def test_straggler_detector():
+    det = StragglerDetector(n_hosts=8, min_steps=3)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for _ in range(10):
+        t = rng.normal(1.0, 0.02, 8)
+        t[3] = 3.0                      # host 3 is consistently 3x slower
+        flagged = det.observe(t)
+    assert flagged == [3]
+    assert 3 not in det.healthy_hosts()
+
+
+def test_pipeline_determinism_and_sharding():
+    d = SyntheticLMData(vocab=128, seq_len=16, global_batch=8, seed=1)
+    a, b = d.batch_at(3), d.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch_at(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding partitions the batch exactly
+    shards = [d.host_shard(a, h, 4) for h in range(4)]
+    recon = np.concatenate([s["tokens"] for s in shards])
+    np.testing.assert_array_equal(recon, a["tokens"])

@@ -2,9 +2,14 @@
 
 Every benchmark emits ``name,us_per_call,derived`` rows (us_per_call = mean
 wall time per objective evaluation / optimizer iteration; derived = the
-figure's headline metric) and caches its full table under
-results/benchmarks/<name>.csv so re-running ``benchmarks.run`` replays
-without recomputation (delete the CSV to force a re-run).
+figure's headline metric) and writes its full table under
+results/benchmarks/<name>.csv.
+
+Caching is two-tier: the figure benchmarks (fig2/fig3/fig4) resume from
+the experiment engine's unit store (results/expstore/units.jsonl — one
+record per (method, workload, target, seed, budget) cell, shared across
+figures, delete it to force recomputation), while the micro-benchmarks
+keep the whole-table CSV cache via ``cached()``.
 """
 from __future__ import annotations
 
@@ -14,6 +19,21 @@ from typing import Iterable, List, Sequence
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_DIR = os.path.join(ROOT, "results", "benchmarks")
+EXPSTORE_PATH = os.path.join(ROOT, "results", "expstore", "units.jsonl")
+
+
+def unit_store():
+    """The shared engine result store for figure work units."""
+    from repro.exp.store import ResultStore
+    return ResultStore(EXPSTORE_PATH)
+
+
+def figure_engine(dataset, workers: int = 1, store=None):
+    """One engine wiring for every figure benchmark: shared on-disk unit
+    store (cross-figure reuse) unless the caller injects its own."""
+    from repro.exp import make_engine
+    return make_engine(dataset, workers=workers,
+                       store=store if store is not None else unit_store())
 
 
 def out_path(name: str) -> str:

@@ -1,14 +1,14 @@
 """Fig. 3 — hierarchical AutoML optimizers + CloudBandit vs CherryPick/RS.
 
 SMAC, HyperOpt(TPE), Rising Bandits, CB-CherryPick, CB-RBFOpt, with
-CherryPick x1/x3 and RS for reference.
+CherryPick x1/x3 and RS for reference.  Engine-backed (see fig2_sota):
+units shared with Fig. 2 (cherrypick_x1/x3, random at the same budgets)
+are replayed from the store, not recomputed.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import cached, emit, write_rows
-from repro.core.evaluate import regret_curves
+from benchmarks.common import emit, figure_engine, write_rows
+from repro.exp import regret_curves
 from repro.multicloud import build_dataset
 
 NAME = "fig3_hierarchical"
@@ -17,18 +17,16 @@ METHODS = ("smac", "hyperopt", "rb", "cb_cherrypick", "cb_rbfopt",
 BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
 
 
-def run(seeds=range(2), quick: bool = False):
-    rows = cached(NAME)
-    if rows:
-        return rows
+def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None):
     ds = build_dataset()
+    engine = figure_engine(ds, workers=workers, store=store)
     workloads = ds.workloads[::3] if quick else ds.workloads
     out = []
     for target in ("cost", "time"):
-        t0 = time.time()
         curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
-                               workloads)
-        per_iter = (time.time() - t0) / (
+                               workloads, engine=engine)
+        # recorded per-unit compute time (replay-stable; see fig2_sota)
+        per_iter = engine.stats.unit_elapsed_s / (
             len(METHODS) * len(workloads) * len(seeds) * max(BUDGETS)) * 1e6
         for m, c in curves.items():
             for b, r in zip(BUDGETS, c):
@@ -37,8 +35,8 @@ def run(seeds=range(2), quick: bool = False):
     return write_rows(NAME, ("name", "us_per_call", "derived"), out)
 
 
-def main(quick: bool = False) -> None:
-    emit(run(quick=quick))
+def main(quick: bool = False, workers: int = 1) -> None:
+    emit(run(quick=quick, workers=workers))
 
 
 if __name__ == "__main__":

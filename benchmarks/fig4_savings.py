@@ -2,31 +2,31 @@
 
 Savings distributions (quartiles across the 30 workloads) for SMAC,
 CB-RBFOpt, RS and exhaustive search vs choosing a random provider+config.
+Engine-backed: budget-coupled units (cb_rbfopt at B=33) are shared with
+fig3's regret curves, so a prior fig3 run pre-pays them from the store.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cached, emit, write_rows
-from repro.core.evaluate import savings_distribution
+from benchmarks.common import emit, figure_engine, write_rows
+from repro.exp import savings_distribution
 from repro.multicloud import build_dataset
 
 NAME = "fig4_savings"
 METHODS = ("smac", "cb_rbfopt", "random", "exhaustive")
 
 
-def run(seeds=range(2), quick: bool = False):
-    rows = cached(NAME)
-    if rows:
-        return rows
+def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None):
     ds = build_dataset()
+    engine = figure_engine(ds, workers=workers, store=store)
     workloads = ds.workloads[::3] if quick else ds.workloads
     out = []
     for target in ("cost", "time"):
         for m in METHODS:
             s = savings_distribution(
                 ds, m, budget=33, n_production=64, seeds=seeds,
-                target=target, workloads=workloads)
+                target=target, workloads=workloads, engine=engine)
             out.append([
                 f"fig4.{target}.{m}.median", "",
                 round(float(np.median(s)), 4)])
@@ -42,8 +42,8 @@ def run(seeds=range(2), quick: bool = False):
     return write_rows(NAME, ("name", "us_per_call", "derived"), out)
 
 
-def main(quick: bool = False) -> None:
-    emit(run(quick=quick))
+def main(quick: bool = False, workers: int = 1) -> None:
+    emit(run(quick=quick, workers=workers))
 
 
 if __name__ == "__main__":

@@ -1,13 +1,17 @@
 """Benchmark orchestrator — one benchmark per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Results are cached under
-results/benchmarks/; delete a CSV to force recomputation.  ``--quick``
-subsamples workloads (used for smoke runs); the full protocol (all 30
-workloads) is the default.
+Prints ``name,us_per_call,derived`` CSV on stdout (and *only* CSV —
+error diagnostics go to stderr).  Figure benchmarks run through the
+experiment engine: completed work units are replayed from the JSONL
+store under results/expstore/, so re-runs and crash-resumes recompute
+nothing; ``--workers N`` fans the missing units over a process pool.
+``--quick`` subsamples workloads (used for smoke runs); the full
+protocol (all 30 workloads) is the default.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -16,6 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool width for engine-backed figures")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
@@ -28,11 +34,15 @@ def main() -> None:
         name = mod.__name__.split(".")[-1]
         if args.only and args.only not in name:
             continue
+        kwargs = {"quick": args.quick}
+        if "workers" in inspect.signature(mod.main).parameters:
+            kwargs["workers"] = args.workers
         try:
-            mod.main(quick=args.quick)
+            mod.main(**kwargs)
         except Exception:
             ok = False
-            print(f"{name}.ERROR,,failed", file=sys.stdout)
+            # keep stdout machine-readable: diagnostics belong on stderr
+            print(f"{name}.ERROR,,failed", file=sys.stderr)
             traceback.print_exc(file=sys.stderr)
     if not ok:
         sys.exit(1)

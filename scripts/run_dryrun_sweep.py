@@ -1,24 +1,30 @@
 #!/usr/bin/env python
-"""Drive the full dry-run sweep: every (arch × shape × mesh) cell as a
-subprocess (each needs the 512-device XLA flag set before jax import).
+"""Drive the full dry-run sweep through the experiment engine: every
+(arch × shape × mesh) cell is one work unit executed as a subprocess
+(each needs the 512-device XLA flag set before jax import).
 
-Writes results/dryrun/<arch>.<shape>.<mesh>.json per cell; skips cells whose
-JSON already exists (delete a file to re-run it).  Failures are recorded to
-<cell>.err and the sweep continues.
+Per-cell JSON still lands in results/dryrun/<arch>.<shape>.<mesh>.json
+(downstream consumers read those); completed cells are additionally
+recorded in the engine store results/expstore/dryrun.jsonl, so crashed
+or interrupted sweeps resume from where they stopped and failures are
+retried on the next invocation.  ``--workers N`` runs N cells at once.
 """
 import argparse
 import json
 import os
-import subprocess
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import ARCH_IDS, REGISTRY, shapes_for  # noqa: E402
+from repro.configs import ARCH_IDS, REGISTRY, shapes_for   # noqa: E402
+from repro.exp import ExperimentEngine, ResultStore, WorkUnit  # noqa: E402
+from repro.exp.runners import dryrun_runner                # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT = os.path.join(ROOT, "results", "dryrun")
+STORE = os.path.join(ROOT, "results", "expstore", "dryrun.jsonl")
+
 
 # cheapest-first ordering (by params × layers as a compile-cost proxy)
 def cost_proxy(arch):
@@ -39,53 +45,47 @@ def main():
     ap.add_argument("--meshes", default="pod,multipod")
     ap.add_argument("--timeout", type=int, default=3600)
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="concurrent dry-run cells")
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
-    meshes = args.meshes.split(",")
 
-    todo = list(cells(meshes))
-    t_start = time.time()
-    for i, (arch, shape, mesh, reason) in enumerate(todo):
+    units = []
+    for arch, shape, mesh, reason in cells(args.meshes.split(",")):
         tag = f"{arch}.{shape}.{mesh}"
         if args.only and args.only not in tag:
             continue
-        out = os.path.join(OUT, tag + ".json")
-        err = os.path.join(OUT, tag + ".err")
-        if os.path.exists(out):
-            continue
+        params = {"arch": arch, "shape": shape, "mesh": mesh}
         if reason is not None:
-            with open(out, "w") as f:
-                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
-                           "skipped": reason}, f, indent=2)
-            print(f"[{i+1}/{len(todo)}] SKIP {tag}: {reason}", flush=True)
+            params["skip_reason"] = reason
+        units.append(WorkUnit.make("dryrun", **params))
+
+    engine = ExperimentEngine(
+        dryrun_runner,
+        local_context={"out_dir": OUT, "timeout": args.timeout,
+                       "src_path": os.path.join(ROOT, "src")},
+        store=ResultStore(STORE), workers=args.workers, verbose=True)
+    t0 = time.time()
+    results = engine.run(units)
+    # re-materialize per-cell JSONs that downstream consumers (hillclimb,
+    # render_experiments) read, for cells replayed from the store after
+    # results/dryrun/ was cleaned
+    for unit, res in zip(units, results):
+        if res is None:
             continue
-        cmd = [sys.executable, "-m", "repro.launch.dryrun",
-               "--arch", arch, "--shape", shape, "--out", out]
-        if mesh == "multipod":
-            cmd.append("--multi-pod")
-        env = dict(os.environ)
-        env["PYTHONPATH"] = os.path.join(ROOT, "src")
-        t0 = time.time()
-        print(f"[{i+1}/{len(todo)}] RUN  {tag} ...", flush=True)
-        try:
-            r = subprocess.run(cmd, capture_output=True, text=True,
-                               timeout=args.timeout, env=env)
-        except subprocess.TimeoutExpired:
-            with open(err, "w") as f:
-                f.write("TIMEOUT")
-            print(f"    TIMEOUT after {args.timeout}s", flush=True)
-            continue
-        dt = time.time() - t0
-        if r.returncode != 0:
-            with open(err, "w") as f:
-                f.write(r.stdout[-4000:] + "\n--- stderr ---\n"
-                        + r.stderr[-8000:])
-            print(f"    FAIL ({dt:.0f}s) -> {err}", flush=True)
-        else:
-            if os.path.exists(err):
-                os.remove(err)
-            print(f"    ok ({dt:.0f}s)  total={time.time()-t_start:.0f}s",
-                  flush=True)
+        p = unit.as_dict()
+        path = os.path.join(OUT, f"{p['arch']}.{p['shape']}.{p['mesh']}.json")
+        if not os.path.exists(path):
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+    s = engine.stats
+    print(f"sweep done in {time.time() - t0:.0f}s: {s.total} cells, "
+          f"{s.cached} cached, {s.computed} run, {s.failed} failed",
+          flush=True)
+    for e in s.errors:
+        print(f"  FAILED {e}", file=sys.stderr)
+    if s.failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

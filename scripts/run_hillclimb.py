@@ -1,28 +1,30 @@
 #!/usr/bin/env python
 """§Perf hillclimb driver: run the CloudBandit sharding autotuner on the
-three selected cells (worst roofline fraction / most collective-bound /
-most representative), production pod mesh.
+selected cells (worst roofline fraction / most collective-bound / most
+representative), production pod mesh.
 
-Each arm pull = one XLA compile + roofline scoring.  Results (full
-hypothesis->change->before->after history) land in results/hillclimb/.
+Each arm pull = one XLA compile + roofline scoring.  Cells run as
+experiment-engine work units: full hypothesis->change->before->after
+histories land in results/hillclimb/<cell>.json, completed cells are
+recorded in results/expstore/hillclimb.jsonl so interrupted runs resume,
+and ``--workers N`` tunes N cells concurrently.
 """
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-import json      # noqa: E402
+import argparse  # noqa: E402
 import sys       # noqa: E402
 import time      # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import get_config, get_shape      # noqa: E402
-from repro.launch.mesh import make_production_mesh   # noqa: E402
-from repro.tuner.autotune import autotune            # noqa: E402
-from repro.tuner.objective import CompileCostObjective  # noqa: E402
+from repro.exp import ExperimentEngine, ResultStore, WorkUnit  # noqa: E402
+from repro.exp.runners import hillclimb_runner                 # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT = os.path.join(ROOT, "results", "hillclimb")
+STORE = os.path.join(ROOT, "results", "expstore", "hillclimb.jsonl")
 
 CELLS = [
     # (arch, shape, driver, budget, why chosen)
@@ -40,38 +42,44 @@ CELLS = [
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=1,
+                    help="concurrent hillclimb cells")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
-    mesh = make_production_mesh(multi_pod=False)
-    for arch, shape_name, driver, budget, why in CELLS:
-        tag = f"{arch}.{shape_name}"
-        out = os.path.join(OUT, tag + ".json")
-        if os.path.exists(out):
-            print(f"skip {tag} (exists)")
-            continue
-        print(f"=== hillclimb {tag} [{driver}, B={budget}] — {why}",
-              flush=True)
-        cfg = get_config(arch)
-        shape = get_shape(shape_name)
-        base = json.load(open(os.path.join(
-            ROOT, "results", "dryrun", f"{tag}.pod.json")))
-        t0 = time.time()
-        objective = CompileCostObjective(cfg, shape, mesh, verbose=True)
-        res = autotune(cfg, shape, mesh, budget=budget, driver=driver,
-                       objective=objective)
-        res["why_chosen"] = why
-        res["baseline"] = {k: base.get(k) for k in (
-            "t_step", "t_compute", "t_memory", "t_collective",
-            "bottleneck", "roofline_fraction", "peak_memory_per_chip",
-            "strategy")}
-        res["wall_s"] = round(time.time() - t0, 1)
-        res["speedup_vs_baseline"] = (
-            base["t_step"] / res["best_t_step"] if base.get("t_step") else None)
-        with open(out, "w") as f:
-            json.dump(res, f, indent=2, default=str)
-        print(f"    baseline t={base.get('t_step'):.3f}s -> "
-              f"best t={res['best_t_step']:.3f}s "
-              f"({res['speedup_vs_baseline']:.2f}x) in {res['wall_s']}s",
-              flush=True)
+
+    units = [
+        WorkUnit.make("hillclimb", arch=arch, shape=shape, driver=driver,
+                      budget=budget)
+        for arch, shape, driver, budget, _why in CELLS
+        if not args.only or args.only in f"{arch}.{shape}"
+    ]
+    engine = ExperimentEngine(
+        hillclimb_runner,
+        # `why` is documentation, not identity: keep it out of the
+        # content hash so rewording a rationale never invalidates a
+        # multi-hour tuning run
+        local_context={"out_dir": OUT,
+                       "dryrun_dir": os.path.join(ROOT, "results", "dryrun"),
+                       "why_by_cell": {f"{a}.{s}": w
+                                       for a, s, _d, _b, w in CELLS}},
+        store=ResultStore(STORE), workers=args.workers, verbose=True)
+    t0 = time.time()
+    results = engine.run(units)
+    for res in results:
+        if res:
+            print(f"    {res['tag']}: best t={res['best_t_step']:.3f}s "
+                  f"({res['speedup_vs_baseline']:.2f}x) in {res['wall_s']}s",
+                  flush=True)
+    s = engine.stats
+    print(f"hillclimb done in {time.time() - t0:.0f}s: {s.total} cells, "
+          f"{s.cached} cached, {s.computed} run, {s.failed} failed",
+          flush=True)
+    for e in s.errors:
+        print(f"  FAILED {e}", file=sys.stderr)
+    if s.failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

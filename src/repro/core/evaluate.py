@@ -133,49 +133,34 @@ def run_predictive(method: str, task: Task, dataset: OfflineDataset,
 
 
 # ---------------------------------------------------------------------------
-# Aggregation (Figs. 2-3): mean regret over seeds × workloads per budget
+# Aggregation (Figs. 2-3): mean regret over seeds × workloads per budget.
+# Thin wrappers over the experiment engine (repro.exp): units fan out over
+# a process pool when workers > 1 and replay from the JSONL store when a
+# store/store_path is given; workers=1 with no store reproduces the
+# historical in-process serial behaviour bit-for-bit.
 # ---------------------------------------------------------------------------
 def regret_curves(dataset: OfflineDataset, methods: Sequence[str],
                   budgets: Sequence[int], seeds: Sequence[int],
-                  target: str, workloads: Optional[Sequence[str]] = None
+                  target: str, workloads: Optional[Sequence[str]] = None,
+                  *, workers: int = 1, store=None,
+                  store_path: Optional[str] = None, engine=None
                   ) -> Dict[str, List[float]]:
-    workloads = workloads or dataset.workloads
-    out: Dict[str, List[float]] = {}
-    max_b = max(budgets)
-    for method in methods:
-        per_budget = {b: [] for b in budgets}
-        for w in workloads:
-            task = dataset.task(w, target)
-            for seed in seeds:
-                if method in ("rb", "cb_cherrypick", "cb_rbfopt"):
-                    # trajectory depends on the total budget: one run per B
-                    for b in budgets:
-                        h = run_search(method, task, dataset.domain, b, seed)
-                        per_budget[b].append(task.regret(min(h.values)))
-                else:
-                    h = run_search(method, task, dataset.domain, max_b, seed)
-                    curve = h.best_curve()
-                    for b in budgets:
-                        per_budget[b].append(
-                            task.regret(curve[min(b, len(curve)) - 1]))
-        out[method] = [float(np.mean(per_budget[b])) for b in budgets]
-    return out
+    from repro.exp import protocols
+    return protocols.regret_curves(
+        dataset, methods, budgets, seeds, target, workloads,
+        workers=workers, store=store, store_path=store_path, engine=engine)
 
 
 def predictive_regret(dataset: OfflineDataset, methods: Sequence[str],
                       seeds: Sequence[int], target: str,
-                      workloads: Optional[Sequence[str]] = None
-                      ) -> Dict[str, float]:
-    workloads = workloads or dataset.workloads
-    out = {}
-    for method in methods:
-        vals = [
-            run_predictive(method, dataset.task(w, target), dataset,
-                           seed)["regret"]
-            for w in workloads for seed in seeds
-        ]
-        out[method] = float(np.mean(vals))
-    return out
+                      workloads: Optional[Sequence[str]] = None,
+                      *, workers: int = 1, store=None,
+                      store_path: Optional[str] = None,
+                      engine=None) -> Dict[str, float]:
+    from repro.exp import protocols
+    return protocols.predictive_regret(
+        dataset, methods, seeds, target, workloads,
+        workers=workers, store=store, store_path=store_path, engine=engine)
 
 
 # ---------------------------------------------------------------------------
@@ -193,20 +178,13 @@ def savings_for_history(task: Task, hist: History, n_production: int
 def savings_distribution(dataset: OfflineDataset, method: str, *,
                          budget: int = 33, n_production: int = 64,
                          seeds: Sequence[int] = (0,), target: str = "cost",
-                         workloads: Optional[Sequence[str]] = None
-                         ) -> np.ndarray:
+                         workloads: Optional[Sequence[str]] = None,
+                         workers: int = 1, store=None,
+                         store_path: Optional[str] = None,
+                         engine=None) -> np.ndarray:
     """Per-workload savings (averaged over seeds) — the Fig. 4 box plots."""
-    workloads = workloads or dataset.workloads
-    out = []
-    for w in workloads:
-        task = dataset.task(w, target)
-        vals = []
-        for seed in seeds:
-            if method == "exhaustive":
-                h = run_search(method, task, dataset.domain,
-                               dataset.domain.size(), seed)
-            else:
-                h = run_search(method, task, dataset.domain, budget, seed)
-            vals.append(savings_for_history(task, h, n_production))
-        out.append(float(np.mean(vals)))
-    return np.asarray(out)
+    from repro.exp import protocols
+    return protocols.savings_distribution(
+        dataset, method, budget=budget, n_production=n_production,
+        seeds=seeds, target=target, workloads=workloads,
+        workers=workers, store=store, store_path=store_path, engine=engine)

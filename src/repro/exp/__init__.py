@@ -1,0 +1,12 @@
+"""Parallel, cached, resumable experiment engine (see engine.py)."""
+from repro.exp.engine import EngineStats, ExperimentEngine, WorkUnit
+from repro.exp.protocols import (
+    BUDGET_COUPLED, make_engine, predictive_regret, regret_curves,
+    savings_distribution)
+from repro.exp.store import ResultStore, unit_key
+
+__all__ = [
+    "BUDGET_COUPLED", "EngineStats", "ExperimentEngine", "ResultStore",
+    "WorkUnit", "make_engine", "predictive_regret", "regret_curves",
+    "savings_distribution", "unit_key",
+]

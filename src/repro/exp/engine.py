@@ -1,0 +1,216 @@
+"""Parallel, cached, resumable experiment engine.
+
+The paper's evaluation protocol is embarrassingly parallel: every
+(method, workload, target, seed, budget) cell is an independent
+table-lookup search.  The engine decomposes a protocol into such
+:class:`WorkUnit`\\ s, replays the ones already in the
+:class:`~repro.exp.store.ResultStore`, fans the missing ones out over a
+``concurrent.futures`` process pool, and persists each result as it
+completes — so crashes resume where they stopped and a second invocation
+recomputes nothing.
+
+Determinism: a unit's outcome depends only on (kind, params, context) —
+each unit carries its own seed and runners derive all randomness from it
+— so ``workers=1`` and ``workers=N`` produce byte-identical results, and
+aggregation order is fixed by the submitted unit list, never by
+completion order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+import sys
+import time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.exp.store import ResultStore, unit_key
+
+#: runner signature: (kind, params, context) -> JSON-serializable dict
+Runner = Callable[[str, Dict[str, Any], Dict[str, Any]], dict]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkUnit:
+    """One independent experiment cell.
+
+    ``params`` is stored as a sorted (name, value) tuple so units are
+    hashable (deduplicatable) and canonical for content hashing.
+    """
+    kind: str
+    params: Tuple[Tuple[str, Any], ...]
+
+    @classmethod
+    def make(cls, kind: str, **params: Any) -> "WorkUnit":
+        return cls(kind, tuple(sorted(params.items())))
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    total: int = 0          # slots requested (incl. duplicates)
+    unique: int = 0         # distinct units after dedup
+    cached: int = 0         # unique units replayed from the store
+    computed: int = 0       # unique units actually executed
+    failed: int = 0         # unique units whose runner raised
+    elapsed_s: float = 0.0  # wall time of this run() call
+    #: sum of per-unit compute time as recorded when each unit was first
+    #: executed — stable across store replays (unlike wall time)
+    unit_elapsed_s: float = 0.0
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+
+def _invoke(runner: Runner, kind: str, params: Dict[str, Any],
+            context: Dict[str, Any]) -> Tuple[dict, float]:
+    """Top-level trampoline so the pool only pickles primitives + a
+    module-level runner reference."""
+    t0 = time.time()
+    result = runner(kind, params, context)
+    return result, time.time() - t0
+
+
+_BLAS_LIMIT = None          # keeps the threadpoolctl limiter alive
+
+
+def _worker_init() -> None:
+    """Pin BLAS to one thread per pool worker: units are tiny (88-point
+    grids), so library-level threading only makes N workers thrash each
+    other's cores.  threadpoolctl works post-fork where env vars can't."""
+    global _BLAS_LIMIT
+    try:
+        from threadpoolctl import threadpool_limits
+        _BLAS_LIMIT = threadpool_limits(limits=1)
+    except Exception:       # noqa: BLE001 — best-effort, optional dep
+        pass
+
+
+def _resolve_mp_context(name: Optional[str]):
+    name = name or os.environ.get("REPRO_EXP_MP") or "fork"
+    try:
+        return multiprocessing.get_context(name)
+    except ValueError:
+        return multiprocessing.get_context()
+
+
+class ExperimentEngine:
+    """Run work units through a runner with caching and parallelism.
+
+    runner   : module-level callable ``(kind, params, context) -> dict``
+               (must be picklable by reference for ``workers > 1``)
+    context  : code-relevant parameters folded into every unit's content
+               hash (e.g. ``{"dataset_seed": 0}``)
+    local_context : operational parameters the runner needs but which must
+               NOT affect identity — output dirs, timeouts, machine paths.
+               Merged into the context passed to runners, excluded from
+               the hash (so a re-run with a different ``--timeout`` or
+               from another checkout still replays the store).
+    store    : :class:`ResultStore`; in-memory if omitted
+    workers  : ``<= 1`` runs serially in-process; ``> 1`` uses a process
+               pool (fork by default — override with ``mp_context`` or
+               the ``REPRO_EXP_MP`` env var)
+    """
+
+    def __init__(self, runner: Runner,
+                 context: Optional[Mapping[str, Any]] = None,
+                 store: Optional[ResultStore] = None, workers: int = 1,
+                 mp_context: Optional[str] = None,
+                 local_context: Optional[Mapping[str, Any]] = None,
+                 verbose: bool = False):
+        self.runner = runner
+        self.context = dict(context or {})
+        self.local_context = dict(local_context or {})
+        self.store = store if store is not None else ResultStore()
+        self.workers = int(workers)
+        self.mp_context = mp_context
+        self.verbose = verbose
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------------
+    def key_for(self, unit: WorkUnit) -> str:
+        return unit_key(unit.kind, unit.as_dict(), self.context)
+
+    @property
+    def _runner_context(self) -> Dict[str, Any]:
+        return {**self.context, **self.local_context}
+
+    def run(self, units: Sequence[WorkUnit]) -> List[Optional[dict]]:
+        """Execute (or replay) units; returns one result payload per
+        slot, aligned with ``units`` (``None`` for failed units)."""
+        t0 = time.time()
+        keys = [self.key_for(u) for u in units]
+        todo: Dict[str, WorkUnit] = {}
+        for k, u in zip(keys, units):
+            if k not in self.store and k not in todo:
+                todo[k] = u
+        self.stats = EngineStats(total=len(units),
+                                 unique=len(set(keys)),
+                                 cached=len(set(keys)) - len(todo))
+        if todo:
+            if self.workers <= 1:
+                self._run_serial(todo)
+            else:
+                self._run_pool(todo)
+        self.stats.elapsed_s = time.time() - t0
+        out: List[Optional[dict]] = []
+        seen = set()
+        for k in keys:
+            rec = self.store.get(k)
+            out.append(rec["result"] if rec else None)
+            if rec and k not in seen:
+                seen.add(k)
+                self.stats.unit_elapsed_s += float(rec.get("elapsed_s", 0.0))
+        return out
+
+    # ------------------------------------------------------------------
+    def _record(self, key: str, unit: WorkUnit, result: dict,
+                elapsed: float) -> None:
+        self.store.put(key, {
+            "kind": unit.kind, "params": unit.as_dict(),
+            "context": self.context, "result": result,
+            "elapsed_s": round(elapsed, 4),
+        })
+        self.stats.computed += 1
+
+    def _fail(self, unit: WorkUnit, exc: BaseException) -> None:
+        self.stats.failed += 1
+        msg = f"{unit.kind}{unit.as_dict()}: {type(exc).__name__}: {exc}"
+        self.stats.errors.append(msg)
+        if self.verbose:
+            print(f"[exp] FAIL {msg}", file=sys.stderr, flush=True)
+
+    def _run_serial(self, todo: Dict[str, WorkUnit]) -> None:
+        for key, unit in todo.items():
+            try:
+                result, dt = _invoke(self.runner, unit.kind, unit.as_dict(),
+                                     self._runner_context)
+            except Exception as exc:            # noqa: BLE001
+                self._fail(unit, exc)
+                continue
+            self._record(key, unit, result, dt)
+
+    def _run_pool(self, todo: Dict[str, WorkUnit]) -> None:
+        ctx = _resolve_mp_context(self.mp_context)
+        with ProcessPoolExecutor(max_workers=self.workers,
+                                 mp_context=ctx,
+                                 initializer=_worker_init) as pool:
+            ctx_arg = self._runner_context
+            pending = {
+                pool.submit(_invoke, self.runner, unit.kind, unit.as_dict(),
+                            ctx_arg): (key, unit)
+                for key, unit in todo.items()
+            }
+            # persist each result the moment it lands: a crash mid-sweep
+            # loses at most the in-flight units
+            while pending:
+                done, _ = wait(pending, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    key, unit = pending.pop(fut)
+                    try:
+                        result, dt = fut.result()
+                    except Exception as exc:    # noqa: BLE001
+                        self._fail(unit, exc)
+                        continue
+                    self._record(key, unit, result, dt)

@@ -1,0 +1,166 @@
+"""Figure protocols decomposed into engine work units + thin aggregation.
+
+Each protocol (Figs. 2-4) expands into independent
+``(method, workload, target, seed, budget)`` units, runs them through an
+:class:`~repro.exp.engine.ExperimentEngine`, and aggregates the returned
+evaluation traces exactly as the legacy serial loops in
+``repro.core.evaluate`` did — same nesting order, same float reduction
+order — so engine output is bit-identical to the historical path for
+fixed seeds, at any worker count.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.exp.engine import ExperimentEngine, WorkUnit
+from repro.exp.runners import search_runner
+from repro.exp.store import ResultStore
+
+#: methods whose evaluation trajectory depends on the *total* budget
+#: (successive-halving style schedules): one unit per (seed, budget);
+#: everything else runs once at max budget and is read off the curve
+BUDGET_COUPLED = frozenset({"rb", "cb_cherrypick", "cb_rbfopt"})
+
+
+def make_engine(dataset, *, workers: int = 1,
+                store: Optional[ResultStore] = None,
+                store_path: Optional[str] = None,
+                mp_context: Optional[str] = None) -> ExperimentEngine:
+    """Engine wired for offline-dataset search units.
+
+    The content-hash context carries the dataset collection seed: a
+    dataset rebuilt with another seed never replays stale results.
+    """
+    if store is None:
+        store = ResultStore(store_path)
+    return ExperimentEngine(
+        search_runner, context={"dataset_seed": int(dataset.seed)},
+        store=store, workers=workers, mp_context=mp_context)
+
+
+def _search_unit(method: str, workload: str, target: str, seed: int,
+                 budget: int) -> WorkUnit:
+    return WorkUnit.make("search", method=method, workload=workload,
+                         target=target, seed=int(seed), budget=int(budget))
+
+
+# ---------------------------------------------------------------------------
+# Figs. 2-3: mean regret over seeds × workloads per budget
+# ---------------------------------------------------------------------------
+def regret_curves(dataset, methods: Sequence[str], budgets: Sequence[int],
+                  seeds: Sequence[int], target: str,
+                  workloads: Optional[Sequence[str]] = None, *,
+                  engine: Optional[ExperimentEngine] = None,
+                  workers: int = 1, store: Optional[ResultStore] = None,
+                  store_path: Optional[str] = None
+                  ) -> Dict[str, List[float]]:
+    workloads = list(workloads or dataset.workloads)
+    engine = engine or make_engine(dataset, workers=workers, store=store,
+                                   store_path=store_path)
+    max_b = max(budgets)
+    units: List[WorkUnit] = []
+    slots: List[tuple] = []            # (method, workload, fixed_budget|None)
+    for method in methods:
+        for w in workloads:
+            for seed in seeds:
+                if method in BUDGET_COUPLED:
+                    for b in budgets:
+                        units.append(_search_unit(method, w, target, seed, b))
+                        slots.append((method, w, int(b)))
+                else:
+                    units.append(_search_unit(method, w, target, seed, max_b))
+                    slots.append((method, w, None))
+    results = engine.run(units)
+
+    per_budget = {(m, int(b)): [] for m in methods for b in budgets}
+    for (method, w, b), res in zip(slots, results):
+        if res is None:
+            raise RuntimeError(
+                f"unit failed for {method}/{w}: "
+                + "; ".join(engine.stats.errors[:3]))
+        task = dataset.task(w, target)
+        values = res["values"]
+        if b is not None:
+            per_budget[(method, b)].append(task.regret(min(values)))
+        else:
+            curve = np.minimum.accumulate(np.asarray(values))
+            for bb in budgets:
+                per_budget[(method, int(bb))].append(
+                    task.regret(curve[min(bb, len(curve)) - 1]))
+    return {m: [float(np.mean(per_budget[(m, int(b))])) for b in budgets]
+            for m in methods}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 horizontal lines: predictive methods
+# ---------------------------------------------------------------------------
+def predictive_regret(dataset, methods: Sequence[str],
+                      seeds: Sequence[int], target: str,
+                      workloads: Optional[Sequence[str]] = None, *,
+                      engine: Optional[ExperimentEngine] = None,
+                      workers: int = 1, store: Optional[ResultStore] = None,
+                      store_path: Optional[str] = None) -> Dict[str, float]:
+    workloads = list(workloads or dataset.workloads)
+    engine = engine or make_engine(dataset, workers=workers, store=store,
+                                   store_path=store_path)
+    units = [
+        WorkUnit.make("predictive", method=m, workload=w, target=target,
+                      seed=int(seed))
+        for m in methods for w in workloads for seed in seeds
+    ]
+    results = engine.run(units)
+    out: Dict[str, float] = {}
+    i = 0
+    for m in methods:
+        vals = []
+        for _w in workloads:
+            for _s in seeds:
+                res = results[i]
+                i += 1
+                if res is None:
+                    raise RuntimeError(f"predictive unit failed for {m}")
+                vals.append(res["regret"])
+        out[m] = float(np.mean(vals))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: production savings distribution
+# ---------------------------------------------------------------------------
+def savings_distribution(dataset, method: str, *, budget: int = 33,
+                         n_production: int = 64,
+                         seeds: Sequence[int] = (0,), target: str = "cost",
+                         workloads: Optional[Sequence[str]] = None,
+                         engine: Optional[ExperimentEngine] = None,
+                         workers: int = 1,
+                         store: Optional[ResultStore] = None,
+                         store_path: Optional[str] = None) -> np.ndarray:
+    workloads = list(workloads or dataset.workloads)
+    engine = engine or make_engine(dataset, workers=workers, store=store,
+                                   store_path=store_path)
+    b = dataset.domain.size() if method == "exhaustive" else budget
+    units = [
+        _search_unit(method, w, target, seed, b)
+        for w in workloads for seed in seeds
+    ]
+    results = engine.run(units)
+    out = []
+    i = 0
+    for w in workloads:
+        task = dataset.task(w, target)
+        r_rand = task.mean_value()
+        vals = []
+        for _s in seeds:
+            res = results[i]
+            i += 1
+            if res is None:
+                raise RuntimeError(f"savings unit failed for {method}/{w}")
+            values = res["values"]
+            c_opt = float(np.sum(values))
+            r_opt = float(np.min(values))
+            n = n_production
+            vals.append((n * r_rand - (c_opt + n * r_opt)) / (n * r_rand))
+        out.append(float(np.mean(vals)))
+    return np.asarray(out)

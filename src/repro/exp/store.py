@@ -1,0 +1,84 @@
+"""Content-addressed JSONL result store for experiment work units.
+
+Each completed unit is persisted as one JSON line keyed by a content hash
+of (schema version, unit kind, unit params, engine context).  The context
+carries everything code-relevant that is *not* in the unit itself — the
+dataset collection seed, protocol revision, etc. — so a change to either
+the unit or the context yields a fresh key and a recompute, while re-runs
+and crash-resumes of an identical experiment replay from the store.
+
+The file is append-only (last record for a key wins), so concurrent
+appends from a single writer process interleaved with crashes never
+corrupt earlier results: a torn trailing line is simply skipped on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any, Dict, Iterable, Mapping, Optional
+
+#: bump when the record format or unit semantics change incompatibly
+SCHEMA_VERSION = 1
+
+
+def unit_key(kind: str, params: Mapping[str, Any],
+             context: Optional[Mapping[str, Any]] = None) -> str:
+    """Deterministic content hash identifying one work unit."""
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "kind": kind,
+        "params": {str(k): params[k] for k in sorted(params)},
+        "context": {str(k): v for k, v in sorted((context or {}).items())},
+    }
+    blob = json.dumps(payload, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+class ResultStore:
+    """Dict-like unit-result cache, optionally backed by a JSONL file.
+
+    ``path=None`` gives a purely in-memory store (used by tests and by
+    library callers that do not want artifacts on disk).
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._records: Dict[str, dict] = {}
+        if path and os.path.exists(path):
+            self._load(path)
+
+    def _load(self, path: str) -> None:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue            # torn tail from a crashed writer
+                if isinstance(rec, dict) and "key" in rec:
+                    self._records[rec["key"]] = rec
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._records
+
+    def get(self, key: str) -> Optional[dict]:
+        return self._records.get(key)
+
+    def put(self, key: str, record: dict) -> None:
+        record = dict(record, key=key)
+        self._records[key] = record
+        if self.path:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            with open(self.path, "a") as f:
+                f.write(json.dumps(record, default=str) + "\n")
+                f.flush()
+
+    def keys(self) -> Iterable[str]:
+        return self._records.keys()

@@ -1,0 +1,12 @@
+"""Version shims for Pallas API renames across jax releases.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``; kernels import the name from here so they run
+on either side of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

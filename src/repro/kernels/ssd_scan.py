@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, state_out_ref,
             state_ref, *, Q: int, n_chunks: int):
@@ -95,7 +97,7 @@ def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
             jax.ShapeDtypeStruct((B_, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bm, Cm, D)

@@ -70,7 +70,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         c = HloCostAnalysis(compiled.as_text()).entry_cost()
         top = sorted(c.bytes_by_op.items(), key=lambda kv: -kv[1])[:8]
         print("bytes_by_op:", {k: f"{v:.2e}" for k, v in top})
-        print({k: v for k, v in compiled.cost_analysis().items()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):       # jax < 0.5 returns [dict]
+            ca = ca[0] if ca else {}
+        print({k: v for k, v in ca.items()
                if k in ("flops", "bytes accessed")})
         print(json.dumps(
             {k: result[k] for k in

@@ -7,13 +7,15 @@ for comparing search methods without re-running clouds.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
 from repro.core.domain import Domain
 from repro.multicloud.perfmodel import (
-    ALL_WORKLOADS, Workload, cost_model, runtime_model)
+    ALL_WORKLOADS, Workload, cost_model, cost_model_batch, runtime_model,
+    runtime_model_batch)
 from repro.multicloud.providers import multicloud_domain
 
 TARGETS = ("cost", "time")
@@ -54,6 +56,7 @@ class OfflineDataset:
     domain: Domain
     tasks: Dict[Tuple[str, str], Task]        # (workload, target) -> Task
     workloads: Tuple[str, ...]
+    seed: int = 0                             # collection seed (cache key)
 
     def task(self, workload: str, target: str) -> Task:
         return self.tasks[(workload, target)]
@@ -71,6 +74,47 @@ class OfflineDataset:
 
 
 def build_dataset(seed: int = 0) -> OfflineDataset:
+    """Build (or fetch the memoized) offline dataset for a collection seed.
+
+    The returned instance is shared across callers and must be treated as
+    immutable — experiment workers rely on that to pay the build at most
+    once per process (forked pool workers inherit it for free).
+    """
+    return _build_dataset_cached(int(seed))
+
+
+@functools.lru_cache(maxsize=8)
+def _build_dataset_cached(seed: int) -> OfflineDataset:
+    domain = multicloud_domain()
+    rng = np.random.default_rng(seed)
+    tasks: Dict[Tuple[str, str], Task] = {}
+    names = tuple(w.name for w in ALL_WORKLOADS)
+    # static per-provider grids: configs + frozen table keys, shared by
+    # every workload (the 88-point grid never changes)
+    grids = [
+        (prov, domain.inner_candidates(prov))
+        for prov in domain.provider_names
+    ]
+    frozen = {prov: [(prov, _freeze(c)) for c in cfgs]
+              for prov, cfgs in grids}
+    for w in ALL_WORKLOADS:
+        rt_table: Dict[Tuple[str, tuple], float] = {}
+        cost_table: Dict[Tuple[str, tuple], float] = {}
+        for prov, cfgs in grids:
+            t = runtime_model_batch(w, prov, cfgs, rng)
+            c = cost_model_batch(t, prov, cfgs)
+            for key, tv, cv in zip(frozen[prov], t, c):
+                rt_table[key] = float(tv)
+                cost_table[key] = float(cv)
+        tasks[(w.name, "time")] = Task(w.name, "time", rt_table)
+        tasks[(w.name, "cost")] = Task(w.name, "cost", cost_table)
+    return OfflineDataset(domain=domain, tasks=tasks, workloads=names,
+                          seed=seed)
+
+
+def build_dataset_reference(seed: int = 0) -> OfflineDataset:
+    """Unvectorized scalar collection loop, kept as the ground truth the
+    vectorized ``build_dataset`` is tested bit-identical against."""
     domain = multicloud_domain()
     rng = np.random.default_rng(seed)
     tasks: Dict[Tuple[str, str], Task] = {}
@@ -85,4 +129,5 @@ def build_dataset(seed: int = 0) -> OfflineDataset:
                 cost_table[(prov, _freeze(cfg))] = cost_model(t, prov, cfg)
         tasks[(w.name, "time")] = Task(w.name, "time", rt_table)
         tasks[(w.name, "cost")] = Task(w.name, "cost", cost_table)
-    return OfflineDataset(domain=domain, tasks=tasks, workloads=names)
+    return OfflineDataset(domain=domain, tasks=tasks, workloads=names,
+                          seed=seed)

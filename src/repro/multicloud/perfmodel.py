@@ -18,7 +18,8 @@ collecting the dataset once and replaying it for every algorithm.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import functools
+from typing import Dict, Sequence
 
 import numpy as np
 
@@ -68,6 +69,7 @@ def _stable_hash(key: tuple) -> int:
         hashlib.md5(repr(key).encode()).digest()[:4], "little")
 
 
+@functools.lru_cache(maxsize=None)
 def _affinity(provider: str, task: str, seed: int = 1234) -> float:
     rng = np.random.default_rng(
         np.random.SeedSequence([seed, _stable_hash((provider, task))]))
@@ -86,12 +88,18 @@ def _config_affinity(w: "Workload", provider: str, config: dict,
     node types.
     """
     key = tuple(sorted((k, v) for k, v in config.items() if k != "nodes"))
+    return _config_affinity_cached(w.task, w.dataset, provider, key,
+                                   config.get("nodes"), seed)
+
+
+@functools.lru_cache(maxsize=None)
+def _config_affinity_cached(task: str, dataset: str, provider: str,
+                            key: tuple, nodes, seed: int) -> float:
     rng = np.random.default_rng(np.random.SeedSequence(
-        [seed, _stable_hash((w.task, w.dataset, provider, key))]))
+        [seed, _stable_hash((task, dataset, provider, key))]))
     plateau = float(np.exp(rng.normal(0.0, 0.32)))
     rng2 = np.random.default_rng(np.random.SeedSequence(
-        [seed + 1, _stable_hash((w.task, w.dataset, provider, key,
-                                 config.get("nodes")))]))
+        [seed + 1, _stable_hash((task, dataset, provider, key, nodes))]))
     jitter = float(np.exp(rng2.normal(0.0, 0.12)))
     return plateau * jitter
 
@@ -126,3 +134,42 @@ def runtime_model(w: Workload, provider: str, config: dict,
 def cost_model(runtime_s: float, provider: str, config: dict) -> float:
     _v, _m, price, _s = node_attrs(provider, config)
     return runtime_s / 3600.0 * config["nodes"] * price
+
+
+# ---------------------------------------------------------------------------
+# Vectorized models over a provider's whole config grid.  Bit-identical to
+# the scalar path: every arithmetic expression keeps the scalar operation
+# order, and the batch noise draw consumes the generator stream exactly as
+# len(configs) sequential scalar draws would (numpy Generator guarantee).
+# ---------------------------------------------------------------------------
+def runtime_model_batch(w: Workload, provider: str,
+                        configs: Sequence[dict],
+                        rng: np.random.Generator) -> np.ndarray:
+    work, alpha, comm, mem_req = TASKS[w.task]
+    wscale, mscale = DATASETS[w.dataset]
+    work, comm, mem_req = work * wscale, comm * np.sqrt(wscale), \
+        mem_req * mscale
+    attrs = np.array([node_attrs(provider, c) for c in configs],
+                     dtype=np.float64)
+    vcpus, mem, _price, speed = attrs.T
+    n = np.array([c["nodes"] for c in configs], dtype=np.float64)
+    speed = speed * _affinity(provider, w.task)
+
+    serial = work * alpha / speed
+    eff = 1.0 / (1.0 + 0.10 * (n - 1))
+    parallel = work * (1 - alpha) / (n * vcpus * speed * eff)
+    comm_t = comm * PROVIDER_NET[provider] * (1 + 0.6 * (n - 1))
+    share = mem_req / n
+    penalty = np.where(share > mem, 1.0 + 5.0 * (share / mem - 1.0), 1.0)
+    t = PROVIDER_OVERHEAD[provider] + serial + parallel * penalty + comm_t
+    t = t * np.array([_config_affinity(w, provider, c) for c in configs])
+    noise = np.exp(rng.normal(0.0, 0.10, size=len(configs)))
+    return t * noise
+
+
+def cost_model_batch(runtime_s: np.ndarray, provider: str,
+                     configs: Sequence[dict]) -> np.ndarray:
+    price = np.array([node_attrs(provider, c)[2] for c in configs],
+                     dtype=np.float64)
+    n = np.array([c["nodes"] for c in configs], dtype=np.float64)
+    return runtime_s / 3600.0 * n * price

@@ -1,8 +1,46 @@
 import os
 import sys
+import types
+
+import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
 # only the dry-run subprocesses request 512 placeholder devices.
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: the property tests are optional — when hypothesis is
+# not installed, install a minimal shim so the four modules that import it
+# still collect, their @given tests skip cleanly, and every non-property
+# test in them keeps running.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    _st = _Strategies("hypothesis.strategies")
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,165 @@
+"""Experiment engine: determinism across worker counts, store resume,
+unit dedup, failure isolation, and vectorized dataset equivalence."""
+import numpy as np
+import pytest
+
+from repro.core.evaluate import regret_curves, run_search
+from repro.exp import (
+    ExperimentEngine, ResultStore, WorkUnit, make_engine, unit_key)
+from repro.exp.runners import search_runner
+from repro.multicloud.dataset import build_dataset, build_dataset_reference
+
+METHODS = ("random", "cd")
+BUDGETS = (11, 22)
+SEEDS = (0, 1)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+@pytest.fixture(scope="module")
+def workloads(ds):
+    return ds.workloads[:2]
+
+
+# ---------------------------------------------------------------------------
+# determinism: serial and parallel runs must agree exactly
+# ---------------------------------------------------------------------------
+def test_parallel_matches_serial(ds, workloads):
+    serial = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
+                           workers=1)
+    parallel = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
+                             workers=4)
+    assert serial == parallel          # exact float equality, not approx
+
+
+def test_engine_matches_legacy_serial_loop(ds, workloads):
+    """The engine aggregation reproduces the historical in-process loop
+    bit-for-bit (same nesting order, same reduction order)."""
+    max_b = max(BUDGETS)
+    legacy = {}
+    for method in METHODS:
+        per = {b: [] for b in BUDGETS}
+        for w in workloads:
+            task = ds.task(w, "cost")
+            for seed in SEEDS:
+                h = run_search(method, task, ds.domain, max_b, seed)
+                curve = h.best_curve()
+                for b in BUDGETS:
+                    per[b].append(task.regret(curve[min(b, len(curve)) - 1]))
+        legacy[method] = [float(np.mean(per[b])) for b in BUDGETS]
+    assert regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",
+                         workloads) == legacy
+
+
+# ---------------------------------------------------------------------------
+# resume: a second invocation replays the JSONL store, recomputing nothing
+# ---------------------------------------------------------------------------
+def test_store_resume_zero_recompute(ds, workloads, tmp_path):
+    path = str(tmp_path / "units.jsonl")
+    eng1 = make_engine(ds, workers=1, store_path=path)
+    first = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
+                          engine=eng1)
+    assert eng1.stats.computed > 0 and eng1.stats.cached == 0
+
+    eng2 = make_engine(ds, workers=1, store_path=path)   # fresh load
+    second = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
+                           engine=eng2)
+    assert eng2.stats.computed == 0
+    assert eng2.stats.cached == eng2.stats.unique
+    assert first == second
+
+
+def test_store_survives_torn_tail(ds, workloads, tmp_path):
+    path = str(tmp_path / "units.jsonl")
+    eng = make_engine(ds, store_path=path)
+    regret_curves(ds, ("random",), BUDGETS, (0,), "cost", workloads,
+                  engine=eng)
+    with open(path, "a") as f:
+        f.write('{"key": "truncated-by-cra')      # simulated crash mid-write
+    eng2 = make_engine(ds, store_path=path)
+    regret_curves(ds, ("random",), BUDGETS, (0,), "cost", workloads,
+                  engine=eng2)
+    assert eng2.stats.computed == 0
+
+
+def test_key_depends_on_dataset_seed():
+    params = {"method": "random", "workload": "kmeans@buzz",
+              "target": "cost", "seed": 0, "budget": 11}
+    k0 = unit_key("search", params, {"dataset_seed": 0})
+    k1 = unit_key("search", params, {"dataset_seed": 1})
+    assert k0 != k1
+    assert k0 == unit_key("search", dict(params), {"dataset_seed": 0})
+
+
+# ---------------------------------------------------------------------------
+# dedup + failure isolation
+# ---------------------------------------------------------------------------
+def test_duplicate_units_computed_once(ds):
+    eng = make_engine(ds)
+    u = WorkUnit.make("search", method="random",
+                      workload=ds.workloads[0], target="cost",
+                      seed=0, budget=11)
+    res = eng.run([u, u, u])
+    assert eng.stats.total == 3 and eng.stats.unique == 1
+    assert eng.stats.computed == 1
+    assert res[0] == res[1] == res[2]
+    assert len(res[0]["values"]) == 11
+
+
+def test_local_context_excluded_from_key():
+    """Operational knobs (timeouts, output dirs) must not invalidate the
+    cache — only `context` is content-hashed."""
+    u = WorkUnit.make("x", i=0)
+    a = ExperimentEngine(_failing_runner, context={"v": 1},
+                         local_context={"timeout": 60})
+    b = ExperimentEngine(_failing_runner, context={"v": 1},
+                         local_context={"timeout": 3600, "out_dir": "/tmp"})
+    c = ExperimentEngine(_failing_runner, context={"v": 2})
+    assert a.key_for(u) == b.key_for(u)
+    assert a.key_for(u) != c.key_for(u)
+
+
+def _failing_runner(kind, params, context):
+    if params.get("boom"):
+        raise RuntimeError("exploded")
+    return {"ok": True}
+
+
+def test_failed_unit_does_not_poison_batch():
+    eng = ExperimentEngine(_failing_runner)
+    res = eng.run([WorkUnit.make("x", boom=False, i=0),
+                   WorkUnit.make("x", boom=True, i=1),
+                   WorkUnit.make("x", boom=False, i=2)])
+    assert res[0] == {"ok": True} and res[2] == {"ok": True}
+    assert res[1] is None
+    assert eng.stats.failed == 1 and eng.stats.computed == 2
+    assert "exploded" in eng.stats.errors[0]
+
+
+def test_search_runner_trace_is_sufficient(ds):
+    """The stored trace equals the History values of a direct run."""
+    w = ds.workloads[0]
+    out = search_runner("search", {"method": "smac", "workload": w,
+                                   "target": "cost", "seed": 3,
+                                   "budget": 11}, {"dataset_seed": 0})
+    h = run_search("smac", ds.task(w, "cost"), ds.domain, 11, 3)
+    assert out["values"] == [float(v) for v in h.values]
+
+
+# ---------------------------------------------------------------------------
+# vectorized dataset == scalar reference, bit for bit
+# ---------------------------------------------------------------------------
+def test_vectorized_dataset_bit_identical_to_reference():
+    vec = build_dataset(seed=0)
+    ref = build_dataset_reference(seed=0)
+    assert vec.workloads == ref.workloads
+    for key, task in vec.tasks.items():
+        assert task.table == ref.tasks[key].table   # exact equality
+
+
+def test_build_dataset_memoized():
+    assert build_dataset(0) is build_dataset(0)
+    assert build_dataset(0) is not build_dataset(1)

@@ -26,6 +26,7 @@ def _batch(cfg, B=2, S=64):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_reduced_train_step(arch):
     cfg = REGISTRY[arch].reduced()
@@ -87,6 +88,7 @@ def test_full_config_param_counts_sane():
         assert 0.5 * target < n < 1.6 * target, (arch, n, target)
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_logits():
     cfg = REGISTRY["qwen1.5-4b"].reduced()
     model = build_model(cfg)
@@ -103,6 +105,7 @@ def test_decode_matches_prefill_logits():
                                rtol=0.05, atol=0.05)
 
 
+@pytest.mark.slow
 def test_banded_superblock_path_exact():
     """gemma3-family banded local:global restructuring is bit-exact."""
     import dataclasses

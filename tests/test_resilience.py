@@ -101,6 +101,7 @@ def test_grad_compression_error_feedback():
     assert compression_ratio(big) > 3.9
 
 
+@pytest.mark.slow
 def test_training_with_compression_converges(tmp_path):
     r = _loop(tmp_path, steps=10, compress=True).run()
     assert np.isfinite(r["losses"]).all()

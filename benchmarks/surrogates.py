@@ -1,0 +1,115 @@
+"""Surrogate hot-path microbenchmarks: vectorized vs reference GP/RF.
+
+Times fit and predict for the two BO surrogates at history sizes
+n in {10, 44, 88} (the candidate grid is 88 configs, so n=88 is the
+worst-case refit) on the real multi-cloud feature encoding, against the
+retained scalar references.  Unlike the figure benchmarks this never
+caches: the point is to record the perf trajectory on every run.
+
+Emits the usual ``name,us_per_call,derived`` CSV rows *and* writes
+``BENCH_surrogates.json`` at the repo root so speedups are tracked in
+version control.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ROOT, emit, write_rows
+from repro.core.surrogates import (
+    GP, GPReference, RandomForest, RandomForestReference, grid_sqdist)
+
+NAME = "surrogates"
+JSON_PATH = os.path.join(ROOT, "BENCH_surrogates.json")
+SIZES = (10, 44, 88)
+
+
+def _time(fn, reps: int) -> float:
+    fn()                            # warmup
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6               # us
+
+
+def _grid():
+    from repro.multicloud.providers import multicloud_domain
+    d = multicloud_domain()
+    enc = d.flat_encoder()
+    return np.stack([enc.encode(c) for c in d.all_candidates()])
+
+
+def run(quick: bool = False):
+    reps = 2 if quick else 5
+    X_all = _grid()
+    rng = np.random.default_rng(0)
+    y_all = rng.standard_normal(len(X_all))
+    S_all = grid_sqdist(X_all)
+
+    rows, payload = [], {"grid": list(X_all.shape), "sizes": {}}
+    for n in SIZES:
+        X, y = X_all[:n], y_all[:n]
+        idx = list(range(n))
+        cell = {}
+
+        pairs = {
+            "gp_fit": (lambda: GP().fit(X, y),
+                       lambda: GPReference().fit(X, y)),
+            "gp_fit_cached_grid": (
+                lambda: GP().fit(X, y, sqdist=S_all[np.ix_(idx, idx)]),
+                lambda: GPReference().fit(X, y)),
+            "rf_fit": (lambda: RandomForest(seed=0).fit(X, y),
+                       lambda: RandomForestReference(seed=0).fit(X, y)),
+        }
+        gp_new = GP().fit(X, y)
+        gp_ref = GPReference().fit(X, y)
+        rf_new = RandomForest(seed=0).fit(X, y)
+        rf_ref = RandomForestReference(seed=0).fit(X, y)
+        pairs["gp_predict"] = (lambda: gp_new.predict(X_all),
+                               lambda: gp_ref.predict(X_all))
+        pairs["rf_predict"] = (lambda: rf_new.predict(X_all),
+                               lambda: rf_ref.predict(X_all))
+
+        for key, (new_fn, ref_fn) in pairs.items():
+            t_new = _time(new_fn, reps)
+            t_ref = _time(ref_fn, reps)
+            cell[key] = {"new_us": round(t_new, 1), "ref_us": round(t_ref, 1),
+                         "speedup": round(t_ref / t_new, 2)}
+            rows.append([f"surrogates.{key}.n{n}.vectorized", round(t_new, 1),
+                         f"speedup={t_ref / t_new:.2f}x"])
+            rows.append([f"surrogates.{key}.n{n}.reference", round(t_ref, 1),
+                         ""])
+
+        for model in ("gp", "rf"):
+            fp_new = cell[f"{model}_fit"]["new_us"] \
+                + cell[f"{model}_predict"]["new_us"]
+            fp_ref = cell[f"{model}_fit"]["ref_us"] \
+                + cell[f"{model}_predict"]["ref_us"]
+            cell[f"{model}_fitpredict"] = {
+                "new_us": round(fp_new, 1), "ref_us": round(fp_ref, 1),
+                "speedup": round(fp_ref / fp_new, 2)}
+        payload["sizes"][str(n)] = cell
+
+    n88 = payload["sizes"]["88"]
+    payload["headline"] = {
+        "rf_fitpredict_n88_speedup": n88["rf_fitpredict"]["speedup"],
+        "gp_fit_n88_speedup": n88["gp_fit"]["speedup"],
+        "gp_fit_cached_grid_n88_speedup": n88["gp_fit_cached_grid"]["speedup"],
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return write_rows(NAME, ("name", "us_per_call", "derived"), rows)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

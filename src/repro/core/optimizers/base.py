@@ -50,6 +50,7 @@ class BlackBoxOptimizer:
         self.rng = np.random.default_rng(seed)
         self.history = History()
         self._evaluated: set = set()
+        self._hist_idx: List[int] = []
         if encode is not None:
             self._X = np.stack([encode(c) for c in self.candidates])
         else:
@@ -69,6 +70,7 @@ class BlackBoxOptimizer:
 
     def tell(self, idx: int, value: float) -> None:
         self._evaluated.add(idx)
+        self._hist_idx.append(int(idx))
         self.history.append(self.candidates[idx], float(value))
 
     def best(self) -> Tuple[Any, float]:
@@ -87,12 +89,24 @@ class BlackBoxOptimizer:
         return self.history
 
     # helpers for model-based subclasses ------------------------------
+    def _observed_indices(self) -> Optional[List[int]]:
+        """Candidate indices of the evaluation history (repeats kept), or
+        None when a subclass bypassed :meth:`tell` and the log is out of
+        step with the history."""
+        if self._X is not None and len(self._hist_idx) == len(self.history):
+            return self._hist_idx
+        return None
+
     def _observed_xy(self) -> Tuple[np.ndarray, np.ndarray]:
-        idxs = [self.candidates.index(p) if not isinstance(p, int) else p
-                for p in []]
-        # (re-encode from history points to tolerate repeats)
-        X = np.stack([self.encode(p) for p in self.history.points])
-        y = np.asarray(self.history.values)
+        """Encoded history -> (X, y).  Indexes the precomputed candidate
+        encodings when possible; falls back to re-encoding the history
+        points (bit-identical — ``encode`` is deterministic)."""
+        idxs = self._observed_indices()
+        if idxs is not None:
+            X = self._X[idxs]
+        else:
+            X = np.stack([self.encode(p) for p in self.history.points])
+        y = np.asarray(self.history.values, float)
         return X, y
 
     #: SMAC-style incumbent seeding: model-based optimizers evaluate the

@@ -1,72 +1,7 @@
-"""Gaussian-process regression (Matern 5/2) for BO surrogates.
+"""Back-compat shim: the GP surrogate now lives in
+:mod:`repro.core.surrogates.gp` (vectorized, distance-caching rewrite;
+the original scalar implementation is retained as
+:class:`repro.core.surrogates.reference.GPReference`)."""
+from repro.core.surrogates.gp import GP, matern52  # noqa: F401
 
-Self-contained numpy/scipy implementation (the offline container has no
-scikit-optimize).  Hyperparameters: amplitude = var(y), single lengthscale by
-median heuristic, optionally refined by a small log-marginal-likelihood grid
-search (cheap at n ≤ 88 points).
-"""
-from __future__ import annotations
-
-import numpy as np
-from scipy.linalg import cho_factor, cho_solve
-
-
-def matern52(X1: np.ndarray, X2: np.ndarray, ls: float) -> np.ndarray:
-    d = np.sqrt(np.maximum(
-        np.sum((X1[:, None] - X2[None]) ** 2, -1), 1e-30)) / ls
-    s5 = np.sqrt(5.0) * d
-    return (1 + s5 + 5.0 * d * d / 3.0) * np.exp(-s5)
-
-
-class GP:
-    def __init__(self, noise: float = 1e-3, ls_grid: int = 5):
-        self.noise = noise
-        self.ls_grid = ls_grid
-        self._fitted = False
-
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "GP":
-        self.X = np.asarray(X, float)
-        y = np.asarray(y, float)
-        self.y_mean = y.mean()
-        self.y_std = y.std() + 1e-12
-        self.y = (y - self.y_mean) / self.y_std
-
-        # median-heuristic lengthscale (+ small MLL grid refinement)
-        if len(X) > 1:
-            d = np.sqrt(np.maximum(
-                np.sum((self.X[:, None] - self.X[None]) ** 2, -1), 0))
-            med = np.median(d[d > 0]) if (d > 0).any() else 1.0
-        else:
-            med = 1.0
-        best_ls, best_mll = med, -np.inf
-        for f in np.logspace(-0.6, 0.6, self.ls_grid):
-            ls = med * f
-            mll = self._mll(ls)
-            if mll > best_mll:
-                best_ls, best_mll = ls, mll
-        self.ls = best_ls
-        K = matern52(self.X, self.X, self.ls)
-        K[np.diag_indices_from(K)] += self.noise
-        self._chol = cho_factor(K, lower=True)
-        self._alpha = cho_solve(self._chol, self.y)
-        self._fitted = True
-        return self
-
-    def _mll(self, ls: float) -> float:
-        K = matern52(self.X, self.X, ls)
-        K[np.diag_indices_from(K)] += self.noise
-        try:
-            c = cho_factor(K, lower=True)
-        except np.linalg.LinAlgError:
-            return -np.inf
-        alpha = cho_solve(c, self.y)
-        logdet = 2 * np.sum(np.log(np.diag(c[0])))
-        return float(-0.5 * self.y @ alpha - 0.5 * logdet)
-
-    def predict(self, Xq: np.ndarray):
-        """-> (mean, std) in the original y units."""
-        Kq = matern52(np.asarray(Xq, float), self.X, self.ls)
-        mu = Kq @ self._alpha
-        v = cho_solve(self._chol, Kq.T)
-        var = np.maximum(1.0 + self.noise - np.sum(Kq.T * v, axis=0), 1e-12)
-        return (mu * self.y_std + self.y_mean, np.sqrt(var) * self.y_std)
+__all__ = ["GP", "matern52"]

@@ -1,93 +1,7 @@
-"""Random-forest / extra-trees regressors (from scratch, numpy).
+"""Back-compat shim: the random-forest surrogate now lives in
+:mod:`repro.core.surrogates.rf` (vectorized split search + flattened-tree
+batched predict; the original scalar implementation is retained as
+:class:`repro.core.surrogates.reference.RandomForestReference`)."""
+from repro.core.surrogates.rf import RandomForest  # noqa: F401
 
-Used as the SMAC-style BO surrogate, the Bilal-et-al. time-target surrogate,
-and the PARIS-style predictive model.  Variance across trees provides the
-uncertainty estimate for EI/PI acquisitions.
-"""
-from __future__ import annotations
-
-import numpy as np
-
-
-class _Tree:
-    __slots__ = ("feature", "thresh", "left", "right", "value")
-
-    def __init__(self):
-        self.feature = -1
-        self.value = 0.0
-
-
-def _build(X, y, rng, *, max_depth, min_leaf, n_feats, extra):
-    tree = _Tree()
-    if max_depth == 0 or len(y) < 2 * min_leaf or np.ptp(y) < 1e-12:
-        tree.value = float(y.mean())
-        return tree
-    d = X.shape[1]
-    feats = rng.choice(d, size=min(n_feats, d), replace=False)
-    best = (None, None, np.inf)
-    for f in feats:
-        col = X[:, f]
-        lo, hi = col.min(), col.max()
-        if hi <= lo:
-            continue
-        if extra:
-            threshes = [rng.uniform(lo, hi)]
-        else:
-            vals = np.unique(col)
-            threshes = (vals[:-1] + vals[1:]) / 2
-        for t in threshes:
-            m = col <= t
-            nl, nr = m.sum(), (~m).sum()
-            if nl < min_leaf or nr < min_leaf:
-                continue
-            sse = (y[m].var() * nl + y[~m].var() * nr)
-            if sse < best[2]:
-                best = (f, t, sse)
-    if best[0] is None:
-        tree.value = float(y.mean())
-        return tree
-    f, t, _ = best
-    m = X[:, f] <= t
-    tree.feature, tree.thresh = int(f), float(t)
-    tree.left = _build(X[m], y[m], rng, max_depth=max_depth - 1,
-                       min_leaf=min_leaf, n_feats=n_feats, extra=extra)
-    tree.right = _build(X[~m], y[~m], rng, max_depth=max_depth - 1,
-                        min_leaf=min_leaf, n_feats=n_feats, extra=extra)
-    return tree
-
-
-def _predict_one(tree: _Tree, x: np.ndarray) -> float:
-    while tree.feature >= 0:
-        tree = tree.left if x[tree.feature] <= tree.thresh else tree.right
-    return tree.value
-
-
-class RandomForest:
-    def __init__(self, n_trees: int = 30, max_depth: int = 12,
-                 min_leaf: int = 1, extra: bool = False, seed: int = 0):
-        self.n_trees = n_trees
-        self.max_depth = max_depth
-        self.min_leaf = min_leaf
-        self.extra = extra
-        self.rng = np.random.default_rng(seed)
-
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForest":
-        X = np.asarray(X, float)
-        y = np.asarray(y, float)
-        n, d = X.shape
-        n_feats = max(1, int(np.ceil(np.sqrt(d))))
-        self.trees = []
-        for _ in range(self.n_trees):
-            idx = self.rng.integers(n, size=n) if not self.extra \
-                else np.arange(n)
-            self.trees.append(_build(
-                X[idx], y[idx], self.rng, max_depth=self.max_depth,
-                min_leaf=self.min_leaf, n_feats=n_feats, extra=self.extra))
-        return self
-
-    def predict(self, Xq: np.ndarray):
-        Xq = np.asarray(Xq, float)
-        preds = np.stack([
-            np.array([_predict_one(t, x) for x in Xq])
-            for t in self.trees])
-        return preds.mean(0), preds.std(0) + 1e-9
+__all__ = ["RandomForest"]

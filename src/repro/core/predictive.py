@@ -16,7 +16,7 @@ from typing import Callable, Dict, List, Sequence, Tuple
 import numpy as np
 
 from repro.core.domain import Domain
-from repro.core.optimizers.rf import RandomForest
+from repro.core.surrogates import RandomForest
 
 
 def _ernest_feats(n: float) -> np.ndarray:
@@ -85,16 +85,18 @@ class RFPredictor:
             fp_t = np.array([target_objective(prov, r) for r in refs])
             online_evals += self.n_refs
             fp_t = np.log1p(fp_t)
-            X, y = [], []
+            # grid encodings are workload-independent: encode once, tile a
+            # fingerprint block per offline workload
+            enc_c = enc.encode_many(cands)
+            Xs, ys = [], []
             for wid, obj in offline.items():
                 fp = np.log1p(np.array([obj(prov, r) for r in refs]))
-                for c in cands:
-                    X.append(np.concatenate([enc.encode(c), fp]))
-                    y.append(np.log1p(obj(prov, c)))
+                Xs.append(np.hstack([enc_c, np.tile(fp, (len(cands), 1))]))
+                ys.append(np.log1p(np.array([obj(prov, c) for c in cands])))
             model = RandomForest(n_trees=30, seed=int(
-                self.rng.integers(2 ** 31))).fit(np.stack(X), np.array(y))
-            Xq = np.stack([np.concatenate([enc.encode(c), fp_t])
-                           for c in cands])
+                self.rng.integers(2 ** 31))).fit(
+                    np.vstack(Xs), np.concatenate(ys))
+            Xq = np.hstack([enc_c, np.tile(fp_t, (len(cands), 1))])
             mu, _ = model.predict(Xq)
             i = int(np.argmin(mu))
             pred = float(np.expm1(mu[i]))

@@ -1,0 +1,293 @@
+"""Property-style bit-identity suite: vectorized surrogates vs references.
+
+The vectorized GP/RF in ``repro.core.surrogates`` must be *bit-identical*
+to the retained scalar implementations in
+``repro.core.surrogates.reference`` — same rng consumption order, same
+``<`` tie-breaking in the RF split search, same lengthscale selection —
+across random shapes, seeds, and the degenerate cases that stress
+tie-breaking (constant y, duplicated rows, integer-valued y, binary
+features).  ``np.array_equal`` throughout: no tolerances.
+"""
+import numpy as np
+import pytest
+
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.optimizers.base import BlackBoxOptimizer
+from repro.core.optimizers.bo import _ACQS, BO, acquisition
+from repro.core.surrogates import (
+    GP, GPReference, RandomForest, RandomForestReference, grid_sqdist,
+    pairwise_sqdist)
+
+# ---------------------------------------------------------------------------
+# data generators: random shapes x y-structure edge cases
+# ---------------------------------------------------------------------------
+MODES = ("cont", "int", "binX", "dup", "const")
+
+
+def _case(seed: int, n: int, d: int, mode: str):
+    rng = np.random.default_rng(90_000 + 7919 * seed + 31 * n + hash(mode) % 101)
+    X = rng.random((n, d))
+    y = rng.standard_normal(n)
+    if mode == "int":          # heavy mathematical SSE ties
+        y = rng.integers(0, 4, n).astype(float)
+    elif mode == "binX":       # every feature has exactly one threshold
+        X = rng.integers(0, 2, (n, d)).astype(float)
+    elif mode == "dup":        # duplicate rows
+        X = np.repeat(X[: max(2, (n + 2) // 3)], 3, axis=0)[:n]
+    elif mode == "const":      # zero-variance target -> all-leaf trees
+        y = np.full(n, 1.7)
+    Xq = np.vstack([X, rng.random((7, d))])
+    return X, y, Xq
+
+
+CASES = [(s, n, d, m)
+         for s, (n, d) in enumerate([(5, 2), (13, 3), (20, 5), (44, 9),
+                                     (60, 13), (88, 24)])
+         for m in MODES]
+
+
+# ---------------------------------------------------------------------------
+# random forest
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,n,d,mode", CASES)
+@pytest.mark.parametrize("extra", [False, True])
+def test_rf_bit_identical(seed, n, d, mode, extra):
+    X, y, Xq = _case(seed, n, d, mode)
+    ref = RandomForestReference(n_trees=7, seed=seed, extra=extra).fit(X, y)
+    new = RandomForest(n_trees=7, seed=seed, extra=extra).fit(X, y)
+    mu_r, sd_r = ref.predict(Xq)
+    mu_n, sd_n = new.predict(Xq)
+    assert np.array_equal(mu_r, mu_n)
+    assert np.array_equal(sd_r, sd_n)
+    # identical rng consumption: both draw the same next sample
+    assert ref.rng.integers(2**31) == new.rng.integers(2**31)
+
+
+@pytest.mark.parametrize("mode", ["cont", "int"])
+def test_rf_bit_identical_large_n(mode):
+    """n >> 128: exercises the numpy bracketing path well beyond the
+    pure-Python replica's validity range (PARIS-style predictor regime)."""
+    rng = np.random.default_rng(17)
+    X = rng.random((300, 6))
+    y = rng.standard_normal(300) if mode == "cont" \
+        else rng.integers(0, 3, 300).astype(float)
+    ref = RandomForestReference(n_trees=2, seed=5).fit(X, y)
+    new = RandomForest(n_trees=2, seed=5).fit(X, y)
+    Xq = np.vstack([X[:50], rng.random((20, 6))])
+    assert np.array_equal(ref.predict(Xq)[0], new.predict(Xq)[0])
+
+
+@pytest.mark.parametrize("n", [10, 30, 60])
+@pytest.mark.parametrize("min_leaf", [0, 1, 2])
+def test_rf_bit_identical_ulp_adjacent_values(n, min_leaf):
+    """Columns whose adjacent unique values are 1 ulp apart make the
+    between-values midpoint round up onto the upper value, so `col <= t`
+    keeps every row on the left.  The reference skips such splits via its
+    actual-mask counts; the scan must detect the case and fall back to
+    the exact path instead of recursing into an empty child."""
+    rng = np.random.default_rng(4)
+    a = 1.0 + 2.0**-52
+    b = 1.0 + 2.0**-51          # nextafter(a): (a + b) / 2 == b exactly
+    assert (a + b) / 2 == b
+    X = np.empty((n, 3))
+    X[:, 0] = np.where(rng.random(n) < 0.5, a, b)      # degenerate column
+    X[:, 1] = rng.random(n)
+    X[:, 2] = np.where(rng.random(n) < 0.5, a, b)
+    y = rng.standard_normal(n)
+    for extra in (False, True):
+        ref = RandomForestReference(n_trees=4, min_leaf=min_leaf, seed=1,
+                                    extra=extra).fit(X, y)
+        new = RandomForest(n_trees=4, min_leaf=min_leaf, seed=1,
+                           extra=extra).fit(X, y)
+        Xq = np.vstack([X, rng.random((6, 3))])
+        assert np.array_equal(ref.predict(Xq)[0], new.predict(Xq)[0])
+        assert np.array_equal(ref.predict(Xq)[1], new.predict(Xq)[1])
+
+
+def test_rf_min_leaf_and_depth_variants():
+    X, y, Xq = _case(3, 44, 9, "cont")
+    for min_leaf, max_depth in [(2, 12), (4, 3), (1, 1), (8, 12)]:
+        ref = RandomForestReference(n_trees=5, max_depth=max_depth,
+                                    min_leaf=min_leaf, seed=11).fit(X, y)
+        new = RandomForest(n_trees=5, max_depth=max_depth,
+                           min_leaf=min_leaf, seed=11).fit(X, y)
+        assert np.array_equal(*map(lambda m: m.predict(Xq)[0], (ref, new)))
+
+
+# ---------------------------------------------------------------------------
+# gaussian process
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,n,d,mode", CASES)
+def test_gp_bit_identical(seed, n, d, mode):
+    X, y, Xq = _case(seed, n, d, mode)
+    ref = GPReference().fit(X, y)
+    new = GP().fit(X, y)
+    assert ref.ls == new.ls
+    mu_r, sd_r = ref.predict(Xq)
+    mu_n, sd_n = new.predict(Xq)
+    assert np.array_equal(mu_r, mu_n)
+    assert np.array_equal(sd_r, sd_n)
+
+
+def test_gp_single_point_and_tiny_noise():
+    X = np.array([[0.3, 0.7]])
+    y = np.array([2.0])
+    ref = GPReference(noise=1e-6).fit(X, y)
+    new = GP(noise=1e-6).fit(X, y)
+    q = np.array([[0.3, 0.7], [0.1, 0.2]])
+    assert np.array_equal(ref.predict(q)[0], new.predict(q)[0])
+
+
+def test_gp_cached_grid_sqdist_path():
+    """fit/predict fed slices of the cached candidate-grid distance matrix
+    must equal both the no-cache path and the reference, bitwise."""
+    rng = np.random.default_rng(5)
+    grid = rng.random((31, 6))
+    S = grid_sqdist(grid)
+    assert np.array_equal(S, pairwise_sqdist(grid, grid))
+    assert grid_sqdist(grid) is S          # memoized per grid contents
+    hist = [3, 17, 4, 3, 28, 9]            # repeats tolerated
+    rem = [0, 1, 2, 30, 15]
+    y = rng.standard_normal(len(hist))
+    Xh, Xr = grid[hist], grid[rem]
+    ref = GPReference().fit(Xh, y)
+    cached = GP().fit(Xh, y, sqdist=S[np.ix_(hist, hist)])
+    plain = GP().fit(Xh, y)
+    assert ref.ls == cached.ls == plain.ls
+    mu_r, sd_r = ref.predict(Xr)
+    mu_c, sd_c = cached.predict(Xr, sqdist=S[np.ix_(rem, hist)])
+    mu_p, sd_p = plain.predict(Xr)
+    assert np.array_equal(mu_r, mu_c) and np.array_equal(mu_c, mu_p)
+    assert np.array_equal(sd_r, sd_c) and np.array_equal(sd_c, sd_p)
+
+
+# ---------------------------------------------------------------------------
+# BO integration: full runs through the optimizer must match a legacy BO
+# wired to the reference surrogates (pre-vectorization behavior)
+# ---------------------------------------------------------------------------
+def _toy_domain():
+    return Domain((
+        ProviderSpace("a", (ParamSpace("x", (0, 1, 2, 3)),
+                            ParamSpace("y", ("u", "v")))),
+        ProviderSpace("b", (ParamSpace("z", (0, 1, 2)),)),
+    ), shared=(ParamSpace("nodes", (1, 2, 3)),))
+
+
+def _objective(point):
+    prov, cfg = point
+    base = 1.0 if prov == "a" else 2.0
+    return base + cfg.get("x", cfg.get("z", 0)) * 0.3 + cfg["nodes"] * 0.1
+
+
+class _LegacyBO(BlackBoxOptimizer):
+    """The pre-vectorization BO ask/fit loop, verbatim: re-encodes history
+    on every fit, reference surrogates, gp-hedge scoring the picked
+    acquisition twice."""
+
+    def __init__(self, candidates, encode, seed=0, *, surrogate="gp",
+                 acq="ei", n_init=3, kappa=1.96, xi=0.01):
+        super().__init__(candidates, encode, seed)
+        self.surrogate_kind = surrogate
+        self.acq = acq
+        self.n_init = n_init
+        self.kappa, self.xi = kappa, xi
+        self._gains = np.zeros(len(_ACQS))
+
+    def _fit(self):
+        X = np.stack([self.encode(p) for p in self.history.points])
+        y = np.asarray(self.history.values, float)
+        if self.surrogate_kind == "gp":
+            return GPReference().fit(X, y)
+        return RandomForestReference(
+            extra=(self.surrogate_kind == "et"),
+            seed=int(self.rng.integers(2**31))).fit(X, y)
+
+    def ask(self):
+        if len(self.history) < self.n_init:
+            return self._random_unevaluated()
+        rem = self.remaining()
+        if not rem:
+            return int(self.rng.integers(len(self.candidates)))
+        mu, sd = self._fit().predict(self._X[rem])
+        best = min(self.history.values)
+        if self.acq == "gp_hedge":
+            probs = np.exp(self._gains - self._gains.max())
+            probs /= probs.sum()
+        pick = _ACQS[int(self.rng.choice(len(_ACQS), p=probs))] \
+            if self.acq == "gp_hedge" else self.acq
+        scores = acquisition(pick, mu, sd, best, self.xi, self.kappa)
+        idx = rem[int(np.argmax(scores))]
+        if self.acq == "gp_hedge":
+            for i, a in enumerate(_ACQS):
+                s = acquisition(a, mu, sd, best, self.xi, self.kappa)
+                self._gains[i] -= mu[int(np.argmax(s))]
+        return idx
+
+
+@pytest.mark.parametrize("kw", [
+    dict(surrogate="gp", acq="ei"),
+    dict(surrogate="gp", acq="lcb"),
+    dict(surrogate="rf", acq="pi"),
+    dict(surrogate="rf", acq="ei"),
+    dict(surrogate="et", acq="ei"),
+    dict(surrogate="gp", acq="gp_hedge"),
+])
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_bo_run_bit_identical_to_legacy(kw, seed):
+    d = _toy_domain()
+    cands, enc = d.all_candidates(), d.flat_encoder()
+    new = BO(cands, enc.encode, seed=seed, **kw)
+    old = _LegacyBO(cands, enc.encode, seed=seed, **kw)
+    h_new = new.run(_objective, 18)
+    h_old = old.run(_objective, 18)
+    assert h_new.points == h_old.points
+    assert h_new.values == h_old.values
+    if kw["acq"] == "gp_hedge":
+        assert np.array_equal(new._gains, old._gains)
+
+
+def test_gp_hedge_scores_each_acquisition_once(monkeypatch):
+    """Satellite regression: one acquisition() call per acq name per ask."""
+    import repro.core.optimizers.bo as bo_mod
+    d = _toy_domain()
+    opt = BO(d.all_candidates(), d.flat_encoder().encode, seed=1,
+             surrogate="gp", acq="gp_hedge")
+    calls = []
+    real = bo_mod.acquisition
+    monkeypatch.setattr(bo_mod, "acquisition",
+                        lambda name, *a, **k: calls.append(name)
+                        or real(name, *a, **k))
+    opt.run(_objective, 8)
+    n_model_asks = 8 - opt.n_init
+    assert len(calls) == n_model_asks * len(_ACQS)
+    for i in range(n_model_asks):
+        assert calls[i * len(_ACQS):(i + 1) * len(_ACQS)] == list(_ACQS)
+
+
+# ---------------------------------------------------------------------------
+# acquisition sd floor (satellite regression)
+# ---------------------------------------------------------------------------
+def test_acquisition_zero_sd_is_finite():
+    mu = np.array([1.0, 2.0, 0.5])
+    sd = np.array([0.0, 1e-300, 0.2])
+    with np.errstate(divide="raise", invalid="raise"):
+        for name in _ACQS:
+            scores = acquisition(name, mu, sd, best=1.0)
+            assert np.isfinite(scores).all()
+    # degenerate-sd scores still rank an improving mean above a worse one
+    pi = acquisition("pi", mu, sd, best=1.0)
+    assert pi[2] > pi[1]
+
+
+def test_observed_xy_uses_grid_encodings():
+    """Satellite regression: _observed_xy indexes the precomputed grid and
+    matches re-encoding exactly, repeats included."""
+    d = _toy_domain()
+    cands, enc = d.all_candidates(), d.flat_encoder()
+    opt = BO(cands, enc.encode, seed=0)
+    for idx in (5, 2, 5, 17):              # repeat 5 on purpose
+        opt.tell(idx, _objective(cands[idx]))
+    X, y = opt._observed_xy()
+    assert np.array_equal(
+        X, np.stack([enc.encode(p) for p in opt.history.points]))
+    assert np.array_equal(y, np.asarray(opt.history.values, float))

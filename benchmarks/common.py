@@ -22,18 +22,23 @@ OUT_DIR = os.path.join(ROOT, "results", "benchmarks")
 EXPSTORE_PATH = os.path.join(ROOT, "results", "expstore", "units.jsonl")
 
 
-def unit_store():
-    """The shared engine result store for figure work units."""
-    from repro.exp.store import ResultStore
-    return ResultStore(EXPSTORE_PATH)
+def unit_store(store_dir: str = None):
+    """The shared engine result store for figure work units: the default
+    single-file JSONL, or a sharded directory when ``store_dir`` names
+    one (``--store-dir`` — required for concurrent multi-host sweeps)."""
+    from repro.exp.store import open_store
+    return open_store(store_dir or EXPSTORE_PATH)
 
 
-def figure_engine(dataset, workers: int = 1, store=None):
+def figure_engine(dataset, workers: int = 1, store=None,
+                  executor: str = None, store_dir: str = None):
     """One engine wiring for every figure benchmark: shared on-disk unit
-    store (cross-figure reuse) unless the caller injects its own."""
+    store (cross-figure reuse) unless the caller injects its own, and a
+    selectable executor backend (serial/thread/process)."""
     from repro.exp import make_engine
-    return make_engine(dataset, workers=workers,
-                       store=store if store is not None else unit_store())
+    return make_engine(dataset, workers=workers, executor=executor,
+                       store=store if store is not None
+                       else unit_store(store_dir))
 
 
 def out_path(name: str) -> str:

@@ -17,9 +17,11 @@ NAME = "fig4_savings"
 METHODS = ("smac", "cb_rbfopt", "random", "exhaustive")
 
 
-def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None):
+def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
+        executor: str = None, store_dir: str = None):
     ds = build_dataset()
-    engine = figure_engine(ds, workers=workers, store=store)
+    engine = figure_engine(ds, workers=workers, store=store,
+                           executor=executor, store_dir=store_dir)
     workloads = ds.workloads[::3] if quick else ds.workloads
     out = []
     for target in ("cost", "time"):
@@ -42,8 +44,10 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None):
     return write_rows(NAME, ("name", "us_per_call", "derived"), out)
 
 
-def main(quick: bool = False, workers: int = 1) -> None:
-    emit(run(quick=quick, workers=workers))
+def main(quick: bool = False, workers: int = 1, executor: str = None,
+         store_dir: str = None) -> None:
+    emit(run(quick=quick, workers=workers, executor=executor,
+             store_dir=store_dir))
 
 
 if __name__ == "__main__":

@@ -21,7 +21,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--workers", type=int, default=1,
-                    help="process-pool width for engine-backed figures")
+                    help="executor width for engine-backed figures")
+    ap.add_argument("--executor", default=None,
+                    choices=("serial", "thread", "process"),
+                    help="engine backend (default: serial at --workers 1, "
+                         "process pool above)")
+    ap.add_argument("--store-dir", default=None,
+                    help="sharded result-store directory (multi-host safe) "
+                         "instead of the default single-file store")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
@@ -35,8 +42,10 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         kwargs = {"quick": args.quick}
-        if "workers" in inspect.signature(mod.main).parameters:
-            kwargs["workers"] = args.workers
+        accepted = inspect.signature(mod.main).parameters
+        for opt in ("workers", "executor", "store_dir"):
+            if opt in accepted:
+                kwargs[opt] = getattr(args, opt)
         try:
             mod.main(**kwargs)
         except Exception:

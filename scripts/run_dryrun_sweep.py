@@ -18,7 +18,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import ARCH_IDS, REGISTRY, shapes_for   # noqa: E402
-from repro.exp import ExperimentEngine, ResultStore, WorkUnit  # noqa: E402
+from repro.exp import ExperimentEngine, WorkUnit, open_store  # noqa: E402
 from repro.exp.runners import dryrun_runner                # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -47,6 +47,14 @@ def main():
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--workers", type=int, default=1,
                     help="concurrent dry-run cells")
+    ap.add_argument("--executor", default=None,
+                    choices=("serial", "thread", "process"),
+                    help="engine backend; cells are subprocesses, so "
+                         "'thread' parallelizes them without a process "
+                         "pool (default: serial/process from --workers)")
+    ap.add_argument("--store-dir", default=None,
+                    help="sharded result-store directory (multi-host "
+                         "safe) instead of the single-file default")
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
 
@@ -64,7 +72,8 @@ def main():
         dryrun_runner,
         local_context={"out_dir": OUT, "timeout": args.timeout,
                        "src_path": os.path.join(ROOT, "src")},
-        store=ResultStore(STORE), workers=args.workers, verbose=True)
+        store=open_store(args.store_dir or STORE), workers=args.workers,
+        executor=args.executor, verbose=True)
     t0 = time.time()
     results = engine.run(units)
     # re-materialize per-cell JSONs that downstream consumers (hillclimb,

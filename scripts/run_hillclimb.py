@@ -19,7 +19,7 @@ import time      # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.exp import ExperimentEngine, ResultStore, WorkUnit  # noqa: E402
+from repro.exp import ExperimentEngine, WorkUnit, open_store  # noqa: E402
 from repro.exp.runners import hillclimb_runner                 # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -46,6 +46,13 @@ def main():
     ap.add_argument("--workers", type=int, default=1,
                     help="concurrent hillclimb cells")
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--executor", default=None,
+                    choices=("serial", "thread", "process"),
+                    help="engine backend (default: serial/process from "
+                         "--workers)")
+    ap.add_argument("--store-dir", default=None,
+                    help="sharded result-store directory (multi-host "
+                         "safe) instead of the single-file default")
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
 
@@ -64,7 +71,8 @@ def main():
                        "dryrun_dir": os.path.join(ROOT, "results", "dryrun"),
                        "why_by_cell": {f"{a}.{s}": w
                                        for a, s, _d, _b, w in CELLS}},
-        store=ResultStore(STORE), workers=args.workers, verbose=True)
+        store=open_store(args.store_dir or STORE), workers=args.workers,
+        executor=args.executor, verbose=True)
     t0 = time.time()
     results = engine.run(units)
     for res in results:

@@ -1,12 +1,20 @@
 """Parallel, cached, resumable experiment engine (see engine.py)."""
 from repro.exp.engine import EngineStats, ExperimentEngine, WorkUnit
+from repro.exp.executors import (
+    EXECUTORS, BaseExecutor, ProcessExecutor, SerialExecutor, ThreadExecutor,
+    make_executor)
 from repro.exp.protocols import (
     BUDGET_COUPLED, make_engine, predictive_regret, regret_curves,
     savings_distribution)
-from repro.exp.store import ResultStore, unit_key
+from repro.exp.store import (
+    BaseResultStore, ResultStore, ShardedResultStore, merge_stores,
+    open_store, unit_key)
 
 __all__ = [
-    "BUDGET_COUPLED", "EngineStats", "ExperimentEngine", "ResultStore",
-    "WorkUnit", "make_engine", "predictive_regret", "regret_curves",
-    "savings_distribution", "unit_key",
+    "BUDGET_COUPLED", "BaseExecutor", "BaseResultStore", "EXECUTORS",
+    "EngineStats", "ExperimentEngine", "ProcessExecutor", "ResultStore",
+    "SerialExecutor", "ShardedResultStore", "ThreadExecutor", "WorkUnit",
+    "make_engine", "make_executor", "merge_stores", "open_store",
+    "predictive_regret", "regret_curves", "savings_distribution",
+    "unit_key",
 ]

@@ -1,0 +1,130 @@
+"""Store maintenance CLI: ``python -m repro.exp <cmd>``.
+
+Subcommands operate on either store layout (single-file ``*.jsonl`` or
+sharded directory — detected from the path):
+
+``merge SRC [SRC ...] --out DEST``
+    Consolidate stores from several writers/hosts into one.  The
+    multi-host sweep workflow: every host runs with its own
+    ``--store-dir`` (or its own writer files in a shared directory),
+    then one merge produces the store all hosts replay from.
+``compact STORE``
+    Rewrite to exactly one record per key in deterministic key order,
+    dropping torn lines, superseded duplicates, and stale writer files.
+``gc STORE [--dry-run]``
+    Drop records that no longer re-derive their own content key
+    (old-schema leftovers, hand-edited rows) or lack a result payload,
+    then compact.
+``stat STORE``
+    Record counts by unit kind plus the store's content fingerprint
+    (timing-independent: equal fingerprints ⇒ semantically identical
+    stores, regardless of layout or write order).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from collections import Counter
+
+from repro.exp.store import merge_stores, open_store
+
+
+def _open_existing(path: str):
+    """Maintenance targets must exist: open_store() on a typo'd path
+    would create a fresh empty store and report success against it."""
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"store not found: {path}")
+    return open_store(path)
+
+
+def _warn_load_errors(store, action: str) -> int:
+    """Surface shards a store could not read; maintenance that skipped
+    data must not exit 0."""
+    for path in store.load_errors:
+        print(f"WARNING: unreadable shard not {action}: {path}",
+              file=sys.stderr)
+    return 1 if store.load_errors else 0
+
+
+def _cmd_merge(args: argparse.Namespace) -> int:
+    try:
+        dest = merge_stores(args.sources, args.out)
+    except (FileNotFoundError, RuntimeError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    print(f"merged {len(args.sources)} store(s) -> {args.out}: "
+          f"{len(dest)} records, fingerprint {dest.fingerprint()[:16]}")
+    return _warn_load_errors(dest, "merged")
+
+
+def _cmd_compact(args: argparse.Namespace) -> int:
+    try:
+        store = _open_existing(args.store)
+        store.compact()
+    except (FileNotFoundError, RuntimeError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    print(f"compacted {args.store}: {len(store)} records")
+    return _warn_load_errors(store, "compacted")
+
+
+def _cmd_gc(args: argparse.Namespace) -> int:
+    try:
+        store = _open_existing(args.store)
+        dropped = store.gc(dry_run=args.dry_run)
+    except (FileNotFoundError, RuntimeError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    verb = "would drop" if args.dry_run else "dropped"
+    print(f"gc {args.store}: {verb} {dropped} stale record(s), "
+          f"{len(store) - (dropped if args.dry_run else 0)} live")
+    return _warn_load_errors(store, "gc'd")
+
+
+def _cmd_stat(args: argparse.Namespace) -> int:
+    try:
+        store = _open_existing(args.store)
+    except FileNotFoundError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    kinds = Counter(rec.get("kind", "?") for rec in store.records())
+    print(f"{args.store}: {len(store)} records")
+    for kind, n in sorted(kinds.items()):
+        print(f"  {kind}: {n}")
+    for path in store.load_errors:
+        print(f"  UNREADABLE shard skipped: {path}", file=sys.stderr)
+    print(f"fingerprint: {store.fingerprint()}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.exp",
+        description="experiment result-store maintenance")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("merge", help="merge stores into one")
+    p.add_argument("sources", nargs="+")
+    p.add_argument("--out", required=True)
+    p.set_defaults(fn=_cmd_merge)
+
+    p = sub.add_parser("compact", help="dedup + canonicalize a store")
+    p.add_argument("store")
+    p.set_defaults(fn=_cmd_compact)
+
+    p = sub.add_parser("gc", help="drop stale/undecodable records")
+    p.add_argument("store")
+    p.add_argument("--dry-run", action="store_true")
+    p.set_defaults(fn=_cmd_gc)
+
+    p = sub.add_parser("stat", help="record counts + content fingerprint")
+    p.add_argument("store")
+    p.set_defaults(fn=_cmd_stat)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

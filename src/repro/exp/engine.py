@@ -3,29 +3,32 @@
 The paper's evaluation protocol is embarrassingly parallel: every
 (method, workload, target, seed, budget) cell is an independent
 table-lookup search.  The engine decomposes a protocol into such
-:class:`WorkUnit`\\ s, replays the ones already in the
-:class:`~repro.exp.store.ResultStore`, fans the missing ones out over a
-``concurrent.futures`` process pool, and persists each result as it
-completes — so crashes resume where they stopped and a second invocation
-recomputes nothing.
+:class:`WorkUnit`\\ s, replays the ones already in the result store,
+fans the missing ones out through a pluggable
+:class:`~repro.exp.executors.BaseExecutor` backend (serial, thread
+pool, process pool, or any remote/batch backend implementing the same
+``submit``/``as_completed``/``shutdown`` contract), and persists each
+result as it completes — so crashes resume where they stopped and a
+second invocation recomputes nothing.
 
 Determinism: a unit's outcome depends only on (kind, params, context) —
 each unit carries its own seed and runners derive all randomness from it
-— so ``workers=1`` and ``workers=N`` produce byte-identical results, and
-aggregation order is fixed by the submitted unit list, never by
-completion order.
+— so every executor backend at any worker count produces semantically
+identical stores (equal :meth:`~repro.exp.store.BaseResultStore.fingerprint`)
+and byte-identical aggregations, because aggregation order is fixed by
+the submitted unit list, never by completion order.
 """
 from __future__ import annotations
 
 import dataclasses
-import multiprocessing
-import os
 import sys
 import time
-from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (
+    Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple)
 
-from repro.exp.store import ResultStore, unit_key
+from repro.exp.executors import (
+    BaseExecutor, ExecutorSpec, make_executor)
+from repro.exp.store import BaseResultStore, ResultStore, unit_key
 
 #: runner signature: (kind, params, context) -> JSON-serializable dict
 Runner = Callable[[str, Dict[str, Any], Dict[str, Any]], dict]
@@ -65,41 +68,18 @@ class EngineStats:
 
 def _invoke(runner: Runner, kind: str, params: Dict[str, Any],
             context: Dict[str, Any]) -> Tuple[dict, float]:
-    """Top-level trampoline so the pool only pickles primitives + a
-    module-level runner reference."""
+    """Top-level trampoline so a process pool only pickles primitives +
+    a module-level runner reference."""
     t0 = time.time()
     result = runner(kind, params, context)
     return result, time.time() - t0
-
-
-_BLAS_LIMIT = None          # keeps the threadpoolctl limiter alive
-
-
-def _worker_init() -> None:
-    """Pin BLAS to one thread per pool worker: units are tiny (88-point
-    grids), so library-level threading only makes N workers thrash each
-    other's cores.  threadpoolctl works post-fork where env vars can't."""
-    global _BLAS_LIMIT
-    try:
-        from threadpoolctl import threadpool_limits
-        _BLAS_LIMIT = threadpool_limits(limits=1)
-    except Exception:       # noqa: BLE001 — best-effort, optional dep
-        pass
-
-
-def _resolve_mp_context(name: Optional[str]):
-    name = name or os.environ.get("REPRO_EXP_MP") or "fork"
-    try:
-        return multiprocessing.get_context(name)
-    except ValueError:
-        return multiprocessing.get_context()
 
 
 class ExperimentEngine:
     """Run work units through a runner with caching and parallelism.
 
     runner   : module-level callable ``(kind, params, context) -> dict``
-               (must be picklable by reference for ``workers > 1``)
+               (must be picklable by reference for the process backend)
     context  : code-relevant parameters folded into every unit's content
                hash (e.g. ``{"dataset_seed": 0}``)
     local_context : operational parameters the runner needs but which must
@@ -107,16 +87,25 @@ class ExperimentEngine:
                Merged into the context passed to runners, excluded from
                the hash (so a re-run with a different ``--timeout`` or
                from another checkout still replays the store).
-    store    : :class:`ResultStore`; in-memory if omitted
-    workers  : ``<= 1`` runs serially in-process; ``> 1`` uses a process
-               pool (fork by default — override with ``mp_context`` or
-               the ``REPRO_EXP_MP`` env var)
+    store    : any :class:`~repro.exp.store.BaseResultStore` (single-file
+               or sharded); in-memory if omitted
+    executor : backend spec — ``"serial"`` / ``"thread"`` / ``"process"``,
+               a :class:`~repro.exp.executors.BaseExecutor` instance, or
+               ``None`` to pick from ``workers`` (serial at ``<= 1``, a
+               process pool above — the historical behavior).  Named
+               specs are instantiated fresh per :meth:`run` and shut
+               down after it; injected instances are caller-owned and
+               left running.
+    workers  : backend width (ignored by ``serial``)
+    mp_context : multiprocessing start method for the process backend
+               (default fork; also settable via ``REPRO_EXP_MP``)
     """
 
     def __init__(self, runner: Runner,
                  context: Optional[Mapping[str, Any]] = None,
-                 store: Optional[ResultStore] = None, workers: int = 1,
+                 store: Optional[BaseResultStore] = None, workers: int = 1,
                  mp_context: Optional[str] = None,
+                 executor: ExecutorSpec = None,
                  local_context: Optional[Mapping[str, Any]] = None,
                  verbose: bool = False):
         self.runner = runner
@@ -125,6 +114,7 @@ class ExperimentEngine:
         self.store = store if store is not None else ResultStore()
         self.workers = int(workers)
         self.mp_context = mp_context
+        self.executor = executor
         self.verbose = verbose
         self.stats = EngineStats()
 
@@ -149,10 +139,7 @@ class ExperimentEngine:
                                  unique=len(set(keys)),
                                  cached=len(set(keys)) - len(todo))
         if todo:
-            if self.workers <= 1:
-                self._run_serial(todo)
-            else:
-                self._run_pool(todo)
+            self._execute(todo)
         self.stats.elapsed_s = time.time() - t0
         out: List[Optional[dict]] = []
         seen = set()
@@ -181,36 +168,37 @@ class ExperimentEngine:
         if self.verbose:
             print(f"[exp] FAIL {msg}", file=sys.stderr, flush=True)
 
-    def _run_serial(self, todo: Dict[str, WorkUnit]) -> None:
-        for key, unit in todo.items():
-            try:
-                result, dt = _invoke(self.runner, unit.kind, unit.as_dict(),
-                                     self._runner_context)
-            except Exception as exc:            # noqa: BLE001
-                self._fail(unit, exc)
-                continue
-            self._record(key, unit, result, dt)
-
-    def _run_pool(self, todo: Dict[str, WorkUnit]) -> None:
-        ctx = _resolve_mp_context(self.mp_context)
-        with ProcessPoolExecutor(max_workers=self.workers,
-                                 mp_context=ctx,
-                                 initializer=_worker_init) as pool:
+    def _execute(self, todo: Dict[str, WorkUnit]) -> None:
+        """Fan ``todo`` out through the executor backend, persisting each
+        result the moment it lands: a crash mid-sweep loses at most the
+        in-flight units."""
+        ex = make_executor(self.executor, workers=self.workers,
+                           mp_context=self.mp_context)
+        owned = ex is not self.executor     # instances are caller-owned
+        try:
             ctx_arg = self._runner_context
-            pending = {
-                pool.submit(_invoke, self.runner, unit.kind, unit.as_dict(),
-                            ctx_arg): (key, unit)
+            pending: Dict[Any, Tuple[str, WorkUnit]] = {
+                ex.submit(_invoke, self.runner, unit.kind, unit.as_dict(),
+                          ctx_arg): (key, unit)
                 for key, unit in todo.items()
             }
-            # persist each result the moment it lands: a crash mid-sweep
-            # loses at most the in-flight units
-            while pending:
-                done, _ = wait(pending, return_when=FIRST_COMPLETED)
-                for fut in done:
-                    key, unit = pending.pop(fut)
-                    try:
-                        result, dt = fut.result()
-                    except Exception as exc:    # noqa: BLE001
-                        self._fail(unit, exc)
-                        continue
-                    self._record(key, unit, result, dt)
+            # scope completion to our own futures: a shared (injected)
+            # executor may be serving other engines concurrently
+            for fut in ex.as_completed(list(pending)):
+                key, unit = pending.pop(fut)
+                try:
+                    result, dt = fut.result()
+                except Exception as exc:    # noqa: BLE001
+                    self._fail(unit, exc)
+                    continue
+                self._record(key, unit, result, dt)
+        finally:
+            if owned:
+                ex.shutdown()
+
+
+def __getattr__(name: str):  # pragma: no cover — import back-compat
+    if name in ("_worker_init", "_resolve_mp_context"):
+        import repro.exp.executors as _ex
+        return getattr(_ex, name)
+    raise AttributeError(name)

@@ -1,0 +1,248 @@
+"""Pluggable executor backends for the experiment engine.
+
+The engine's execution model is deliberately tiny: ``submit`` work,
+iterate ``as_completed``, ``shutdown``.  Everything the engine needs —
+crash-durable incremental persistence, failure isolation, determinism —
+is expressed against that interface, so swapping *how* units run (in
+process, in threads, in a process pool, or on a remote/batch service)
+never touches the engine or the protocols.
+
+The interface is async-capable by construction: ``submit`` only enqueues
+and returns a :class:`concurrent.futures.Future`-compatible handle;
+completion is decoupled and surfaces through ``as_completed`` in
+whatever order units actually finish.  A remote or batch backend
+implements it by returning futures resolved from a polling loop or a
+callback — no engine changes required.
+
+Built-in backends:
+
+``serial``   — runs units in submission order, in process, when
+               ``as_completed`` is iterated.  Zero concurrency, zero
+               pickling requirements; bit-for-bit the historical
+               single-worker engine behavior.
+``thread``   — a ``ThreadPoolExecutor``.  Right for IO-bound runners
+               (subprocess-spawning dry-run cells, future remote-API
+               runners); shares the process's memoized dataset cache.
+``process``  — a ``ProcessPoolExecutor`` with BLAS pinned to one thread
+               per worker (units are tiny, library-level threading only
+               makes workers thrash each other's cores).  The historical
+               ``workers > 1`` behavior; requires runner and arguments
+               to be picklable.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import threading
+from concurrent.futures import (
+    FIRST_COMPLETED, Future, ProcessPoolExecutor, ThreadPoolExecutor, wait)
+from typing import (
+    Any, Callable, Dict, Iterable, Iterator, Optional, Type, Union)
+
+
+class BaseExecutor:
+    """Minimal executor contract: ``submit`` / ``as_completed`` /
+    ``shutdown``.
+
+    Subclasses must deliver every submitted future exactly once through
+    ``as_completed`` (in any order) with either a result or an exception
+    set.  Exceptions must be captured into the future, never raised out
+    of ``as_completed`` — the engine turns them into per-unit failures.
+    """
+
+    #: registry name; subclasses override
+    name = "base"
+
+    def submit(self, fn: Callable[..., Any], /, *args: Any,
+               **kwargs: Any) -> Future:
+        raise NotImplementedError
+
+    def as_completed(self,
+                     futures: Optional[Iterable[Future]] = None
+                     ) -> Iterator[Future]:
+        """Yield submitted futures as they finish.
+
+        ``futures`` restricts delivery to that subset — required when
+        several callers share one executor instance (each passes its own
+        futures, so nobody steals or loses another caller's
+        completions).  ``None`` means everything outstanding.
+        """
+        raise NotImplementedError
+
+    def shutdown(self, wait: bool = True) -> None:  # noqa: ARG002
+        """Release workers.  Idempotent."""
+
+    # -- context-manager sugar -------------------------------------------
+    def __enter__(self) -> "BaseExecutor":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+
+class SerialExecutor(BaseExecutor):
+    """In-process, submission-order execution (the ``workers=1`` path).
+
+    ``submit`` only enqueues; the unit runs when ``as_completed`` reaches
+    it.  That keeps the engine's persist-as-you-go semantics: each result
+    is recorded before the next unit starts, so a crash mid-batch loses
+    at most the in-flight unit.
+    """
+
+    name = "serial"
+
+    def __init__(self, workers: int = 1, **_kwargs: Any):
+        self._queue: list = []
+
+    def submit(self, fn: Callable[..., Any], /, *args: Any,
+               **kwargs: Any) -> Future:
+        fut: Future = Future()
+        self._queue.append((fut, fn, args, kwargs))
+        return fut
+
+    def as_completed(self,
+                     futures: Optional[Iterable[Future]] = None
+                     ) -> Iterator[Future]:
+        wanted = None if futures is None else set(futures)
+        remaining = []
+        try:
+            while self._queue:
+                fut, fn, args, kwargs = self._queue.pop(0)
+                if wanted is not None and fut not in wanted:
+                    # someone else's work: leave it queued
+                    remaining.append((fut, fn, args, kwargs))
+                    continue
+                if not fut.set_running_or_notify_cancel():
+                    continue
+                try:
+                    fut.set_result(fn(*args, **kwargs))
+                except BaseException as exc:  # noqa: BLE001 — engine unwraps
+                    fut.set_exception(exc)
+                yield fut
+        finally:
+            # restore other callers' items even if our consumer abandons
+            # the generator mid-iteration (exception or early break)
+            self._queue.extend(remaining)
+
+
+class _PoolBackedExecutor(BaseExecutor):
+    """Shared submit/as_completed plumbing over a concurrent.futures
+    pool; subclasses provide ``_make_pool``."""
+
+    def __init__(self, workers: int = 1, **kwargs: Any):
+        self.workers = max(1, int(workers))
+        self._pool = self._make_pool(**kwargs)
+        self._pending: set = set()
+        self._lock = threading.Lock()
+
+    def _make_pool(self, **kwargs: Any):
+        raise NotImplementedError
+
+    def submit(self, fn: Callable[..., Any], /, *args: Any,
+               **kwargs: Any) -> Future:
+        fut = self._pool.submit(fn, *args, **kwargs)
+        with self._lock:
+            self._pending.add(fut)
+        return fut
+
+    def as_completed(self,
+                     futures: Optional[Iterable[Future]] = None
+                     ) -> Iterator[Future]:
+        if futures is None:
+            with self._lock:
+                waiting = set(self._pending)
+        else:
+            waiting = set(futures)
+        while waiting:
+            done, waiting = wait(waiting, return_when=FIRST_COMPLETED)
+            with self._lock:
+                self._pending -= done
+            for fut in done:
+                yield fut
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)
+
+
+class ThreadExecutor(_PoolBackedExecutor):
+    """Thread-pool backend for IO-bound or subprocess-spawning runners.
+
+    Threads share the parent's memory, so per-process memoized state
+    (e.g. the built dataset) is paid once, not once per worker.
+    """
+
+    name = "thread"
+
+    def _make_pool(self, **_kwargs: Any) -> ThreadPoolExecutor:
+        return ThreadPoolExecutor(max_workers=self.workers,
+                                  thread_name_prefix="exp-unit")
+
+
+_BLAS_LIMIT = None          # keeps the threadpoolctl limiter alive
+
+
+def _worker_init() -> None:
+    """Pin BLAS to one thread per pool worker: units are tiny (88-point
+    grids), so library-level threading only makes N workers thrash each
+    other's cores.  threadpoolctl works post-fork where env vars can't."""
+    global _BLAS_LIMIT
+    try:
+        from threadpoolctl import threadpool_limits
+        _BLAS_LIMIT = threadpool_limits(limits=1)
+    except Exception:       # noqa: BLE001 — best-effort, optional dep
+        pass
+
+
+def _resolve_mp_context(name: Optional[str]):
+    name = name or os.environ.get("REPRO_EXP_MP") or "fork"
+    try:
+        return multiprocessing.get_context(name)
+    except ValueError:
+        return multiprocessing.get_context()
+
+
+class ProcessExecutor(_PoolBackedExecutor):
+    """Process-pool backend (fork by default — override with
+    ``mp_context`` or the ``REPRO_EXP_MP`` env var).  Runner and
+    arguments must be picklable; runners are passed by module-level
+    reference for exactly this reason."""
+
+    name = "process"
+
+    def _make_pool(self, mp_context: Optional[str] = None,
+                   **_kwargs: Any) -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(max_workers=self.workers,
+                                   mp_context=_resolve_mp_context(mp_context),
+                                   initializer=_worker_init)
+
+
+EXECUTORS: Dict[str, Type[BaseExecutor]] = {
+    SerialExecutor.name: SerialExecutor,
+    ThreadExecutor.name: ThreadExecutor,
+    ProcessExecutor.name: ProcessExecutor,
+}
+
+#: a spec is a registry name, an executor instance, or None (= pick from
+#: the worker count: the historical serial/process-pool split)
+ExecutorSpec = Union[None, str, BaseExecutor]
+
+
+def make_executor(spec: ExecutorSpec = None, *, workers: int = 1,
+                  mp_context: Optional[str] = None) -> BaseExecutor:
+    """Resolve an executor spec to a ready instance.
+
+    ``None`` preserves historical engine behavior: serial at
+    ``workers <= 1``, a process pool above.  Instances pass through
+    untouched (caller owns their lifecycle).
+    """
+    if isinstance(spec, BaseExecutor):
+        return spec
+    if spec is None:
+        spec = ProcessExecutor.name if workers > 1 else SerialExecutor.name
+    try:
+        cls = EXECUTORS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor {spec!r} (have: {sorted(EXECUTORS)})"
+        ) from None
+    return cls(workers=workers, mp_context=mp_context)

@@ -15,8 +15,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.exp.engine import ExperimentEngine, WorkUnit
+from repro.exp.executors import ExecutorSpec
 from repro.exp.runners import search_runner
-from repro.exp.store import ResultStore
+from repro.exp.store import BaseResultStore, ResultStore, open_store
 
 #: methods whose evaluation trajectory depends on the *total* budget
 #: (successive-halving style schedules): one unit per (seed, budget);
@@ -25,19 +26,24 @@ BUDGET_COUPLED = frozenset({"rb", "cb_cherrypick", "cb_rbfopt"})
 
 
 def make_engine(dataset, *, workers: int = 1,
-                store: Optional[ResultStore] = None,
+                store: Optional[BaseResultStore] = None,
                 store_path: Optional[str] = None,
+                store_dir: Optional[str] = None,
+                executor: ExecutorSpec = None,
                 mp_context: Optional[str] = None) -> ExperimentEngine:
     """Engine wired for offline-dataset search units.
 
     The content-hash context carries the dataset collection seed: a
     dataset rebuilt with another seed never replays stale results.
+    ``store_dir`` selects the sharded multi-writer layout; ``store_path``
+    the single-file one; ``store`` injects any prebuilt store.
     """
     if store is None:
-        store = ResultStore(store_path)
+        store = open_store(store_dir) if store_dir else ResultStore(store_path)
     return ExperimentEngine(
         search_runner, context={"dataset_seed": int(dataset.seed)},
-        store=store, workers=workers, mp_context=mp_context)
+        store=store, workers=workers, executor=executor,
+        mp_context=mp_context)
 
 
 def _search_unit(method: str, workload: str, target: str, seed: int,
@@ -53,12 +59,15 @@ def regret_curves(dataset, methods: Sequence[str], budgets: Sequence[int],
                   seeds: Sequence[int], target: str,
                   workloads: Optional[Sequence[str]] = None, *,
                   engine: Optional[ExperimentEngine] = None,
-                  workers: int = 1, store: Optional[ResultStore] = None,
-                  store_path: Optional[str] = None
+                  workers: int = 1, store: Optional[BaseResultStore] = None,
+                  store_path: Optional[str] = None,
+                  store_dir: Optional[str] = None,
+                  executor: ExecutorSpec = None
                   ) -> Dict[str, List[float]]:
     workloads = list(workloads or dataset.workloads)
     engine = engine or make_engine(dataset, workers=workers, store=store,
-                                   store_path=store_path)
+                                   store_path=store_path,
+                                   store_dir=store_dir, executor=executor)
     max_b = max(budgets)
     units: List[WorkUnit] = []
     slots: List[tuple] = []            # (method, workload, fixed_budget|None)
@@ -100,11 +109,15 @@ def predictive_regret(dataset, methods: Sequence[str],
                       seeds: Sequence[int], target: str,
                       workloads: Optional[Sequence[str]] = None, *,
                       engine: Optional[ExperimentEngine] = None,
-                      workers: int = 1, store: Optional[ResultStore] = None,
-                      store_path: Optional[str] = None) -> Dict[str, float]:
+                      workers: int = 1,
+                      store: Optional[BaseResultStore] = None,
+                      store_path: Optional[str] = None,
+                      store_dir: Optional[str] = None,
+                      executor: ExecutorSpec = None) -> Dict[str, float]:
     workloads = list(workloads or dataset.workloads)
     engine = engine or make_engine(dataset, workers=workers, store=store,
-                                   store_path=store_path)
+                                   store_path=store_path,
+                                   store_dir=store_dir, executor=executor)
     units = [
         WorkUnit.make("predictive", method=m, workload=w, target=target,
                       seed=int(seed))
@@ -135,11 +148,14 @@ def savings_distribution(dataset, method: str, *, budget: int = 33,
                          workloads: Optional[Sequence[str]] = None,
                          engine: Optional[ExperimentEngine] = None,
                          workers: int = 1,
-                         store: Optional[ResultStore] = None,
-                         store_path: Optional[str] = None) -> np.ndarray:
+                         store: Optional[BaseResultStore] = None,
+                         store_path: Optional[str] = None,
+                         store_dir: Optional[str] = None,
+                         executor: ExecutorSpec = None) -> np.ndarray:
     workloads = list(workloads or dataset.workloads)
     engine = engine or make_engine(dataset, workers=workers, store=store,
-                                   store_path=store_path)
+                                   store_path=store_path,
+                                   store_dir=store_dir, executor=executor)
     b = dataset.domain.size() if method == "exhaustive" else budget
     units = [
         _search_unit(method, w, target, seed, b)

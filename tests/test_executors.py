@@ -1,0 +1,240 @@
+"""Executor backends: registry resolution, contract semantics, and
+cross-executor equivalence — every backend at every width must yield
+byte-identical aggregations and semantically identical stores."""
+import pytest
+
+from repro.exp import (
+    EXECUTORS, ExperimentEngine, ProcessExecutor, ResultStore,
+    SerialExecutor, ThreadExecutor, WorkUnit, make_engine, make_executor,
+    regret_curves)
+from repro.multicloud.dataset import build_dataset
+
+METHODS = ("random", "cd")
+BUDGETS = (11, 22)
+SEEDS = (0, 1)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+@pytest.fixture(scope="module")
+def workloads(ds):
+    return ds.workloads[:2]
+
+
+# ---------------------------------------------------------------------------
+# registry + spec resolution
+# ---------------------------------------------------------------------------
+def test_registry_has_all_builtins():
+    assert set(EXECUTORS) == {"serial", "thread", "process"}
+    assert EXECUTORS["serial"] is SerialExecutor
+    assert EXECUTORS["thread"] is ThreadExecutor
+    assert EXECUTORS["process"] is ProcessExecutor
+
+
+def test_spec_none_keeps_historical_worker_split():
+    assert isinstance(make_executor(None, workers=1), SerialExecutor)
+    ex = make_executor(None, workers=2)
+    assert isinstance(ex, ProcessExecutor)
+    ex.shutdown()
+
+
+def test_instance_spec_passes_through():
+    ex = SerialExecutor()
+    assert make_executor(ex) is ex
+
+
+def test_unknown_spec_raises():
+    with pytest.raises(ValueError, match="unknown executor"):
+        make_executor("slurm")
+
+
+# ---------------------------------------------------------------------------
+# contract: exactly-once delivery, exceptions captured not raised
+# ---------------------------------------------------------------------------
+def _double(x):
+    return 2 * x
+
+
+def _boom(x):
+    raise ValueError(f"boom {x}")
+
+
+@pytest.mark.parametrize("spec,workers", [
+    ("serial", 1), ("thread", 1), ("thread", 4), ("process", 2)])
+def test_every_future_delivered_exactly_once(spec, workers):
+    with make_executor(spec, workers=workers) as ex:
+        futs = {ex.submit(_double, i): i for i in range(8)}
+        futs.update({ex.submit(_boom, i): -1 for i in range(2)})
+        seen = []
+        for fut in ex.as_completed():
+            seen.append(fut)
+            if futs[fut] >= 0:
+                assert fut.result() == 2 * futs[fut]
+            else:
+                with pytest.raises(ValueError, match="boom"):
+                    fut.result()
+        assert len(seen) == len(set(seen)) == 10
+
+
+def test_shared_executor_serves_concurrent_engines():
+    """Two engines running concurrently on one caller-owned executor
+    must each receive exactly their own completions — nothing stolen,
+    nothing lost (as_completed is scoped to the caller's futures)."""
+    import threading
+
+    def runner(kind, params, context):
+        return {"who": params["who"], "i": params["i"]}
+
+    results = {}
+    with ThreadExecutor(workers=4) as ex:
+        def drive(who):
+            eng = ExperimentEngine(runner, context={"who": who},
+                                   store=ResultStore(), executor=ex)
+            out = eng.run([WorkUnit.make("x", who=who, i=i)
+                           for i in range(20)])
+            results[who] = (out, eng.stats)
+
+        threads = [threading.Thread(target=drive, args=(w,))
+                   for w in ("a", "b")]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for who in ("a", "b"):
+        out, stats = results[who]
+        assert stats.computed == 20 and stats.failed == 0
+        assert [r["who"] for r in out] == [who] * 20
+        assert [r["i"] for r in out] == list(range(20))
+
+
+def test_serial_executor_scoped_as_completed_leaves_rest_queued():
+    ex = SerialExecutor()
+    futs = [ex.submit(_double, i) for i in range(4)]
+    mine = futs[:2]
+    done = list(ex.as_completed(mine))
+    assert set(done) == set(mine)
+    assert [f.result() for f in done] == [0, 2]
+    assert not futs[2].done() and not futs[3].done()   # still queued
+    rest = list(ex.as_completed())
+    assert set(rest) == set(futs[2:])
+
+
+def test_serial_executor_abandoned_iteration_keeps_others_queued():
+    """A consumer that abandons as_completed mid-iteration must not
+    destroy other callers' queued work."""
+    ex = SerialExecutor()
+    mine = [ex.submit(_double, i) for i in range(2)]
+    theirs = [ex.submit(_double, i) for i in range(2, 4)]
+    for fut in ex.as_completed(mine):
+        break                                     # abandon after first
+    rest = list(ex.as_completed(theirs))          # still deliverable
+    assert [f.result() for f in rest] == [4, 6]
+
+
+def test_serial_executor_runs_in_submission_order():
+    log = []
+    ex = SerialExecutor()
+    for i in range(5):
+        ex.submit(log.append, i)
+    assert log == []                   # lazy: nothing ran at submit time
+    list(ex.as_completed())
+    assert log == [0, 1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# cross-executor equivalence (fig2-quick-shaped protocol): identical
+# aggregations, semantically identical stores
+# ---------------------------------------------------------------------------
+def test_all_executors_agree_bitwise(ds, workloads):
+    runs = {}
+    stores = {}
+    for label, kwargs in {
+        "serial": dict(executor="serial"),
+        "thread-1": dict(executor="thread", workers=1),
+        "thread-4": dict(executor="thread", workers=4),
+        "process-4": dict(executor="process", workers=4),
+    }.items():
+        store = ResultStore()
+        engine = make_engine(ds, store=store, **kwargs)
+        runs[label] = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",
+                                    workloads, engine=engine)
+        stores[label] = store
+        assert engine.stats.computed == engine.stats.unique
+    ref = runs["serial"]
+    fp = stores["serial"].fingerprint()
+    for label in runs:
+        assert runs[label] == ref, label            # exact float equality
+        assert stores[label].fingerprint() == fp, label
+
+
+def test_injected_executor_reused_across_runs(ds, workloads):
+    """A caller-owned instance survives multiple engine.run() calls and
+    matches the per-run-owned default."""
+    with ThreadExecutor(workers=2) as ex:
+        engine = make_engine(ds, store=ResultStore(), executor=ex)
+        first = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",
+                              workloads, engine=engine)
+        second = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",
+                               workloads, engine=engine)
+    assert first == second
+    assert engine.stats.computed == 0          # second run replayed
+
+
+# ---------------------------------------------------------------------------
+# EngineStats accounting across cold / warm / partially-failed runs
+# ---------------------------------------------------------------------------
+def _flaky_runner(kind, params, context):
+    if params.get("boom"):
+        raise RuntimeError("exploded")
+    return {"ok": params["i"]}
+
+
+def _units(n_ok, n_boom):
+    return ([WorkUnit.make("x", i=i, boom=False) for i in range(n_ok)]
+            + [WorkUnit.make("x", i=i, boom=True) for i in range(n_boom)])
+
+
+@pytest.mark.parametrize("executor", ["serial", "thread"])
+def test_stats_cold_warm_partial(executor):
+    store = ResultStore()
+    units = _units(4, 2) + _units(2, 0)        # 2 duplicate ok-units
+
+    eng = ExperimentEngine(_flaky_runner, store=store, executor=executor,
+                           workers=2)
+    eng.run(units)
+    # cold: everything unique computed or failed, nothing cached
+    assert eng.stats.total == 8
+    assert eng.stats.unique == 6
+    assert eng.stats.cached == 0
+    assert eng.stats.computed == 4
+    assert eng.stats.failed == 2
+    assert len(eng.stats.errors) == 2
+    assert eng.stats.unit_elapsed_s >= 0.0
+    cold_unit_elapsed = eng.stats.unit_elapsed_s
+
+    eng.run(units)
+    # warm: successes replay, only the failed units retry (and re-fail)
+    assert eng.stats.cached == 4
+    assert eng.stats.computed == 0
+    assert eng.stats.failed == 2
+    # unit_elapsed_s comes from stored records: replay-stable
+    assert eng.stats.unit_elapsed_s == cold_unit_elapsed
+
+    ok_only = _units(4, 0)
+    eng.run(ok_only)
+    # fully-warm: pure replay
+    assert eng.stats.total == eng.stats.unique == eng.stats.cached == 4
+    assert eng.stats.computed == eng.stats.failed == 0
+    assert eng.stats.errors == []
+    assert eng.stats.elapsed_s > 0.0
+
+
+def test_stats_reset_between_runs():
+    eng = ExperimentEngine(_flaky_runner, store=ResultStore())
+    eng.run(_units(0, 3))
+    assert eng.stats.failed == 3
+    eng.run(_units(1, 0))
+    assert eng.stats.failed == 0 and eng.stats.computed == 1

@@ -1,0 +1,414 @@
+"""Result stores under fire: fault injection (torn lines, duplicate
+keys, old-schema rows, unreadable shards), concurrent multi-process
+appends, CLI merge/compact/gc, and the multi-writer acceptance path —
+a sweep split across writer processes, merged, replaying bit-identically
+to a single-writer single-file run."""
+import json
+import multiprocessing
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.exp import (
+    ResultStore, ShardedResultStore, make_engine, merge_stores, open_store,
+    regret_curves, unit_key)
+from repro.multicloud.dataset import build_dataset
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+METHODS = ("random", "cd")
+BUDGETS = (11, 22)
+SEEDS = (0, 1)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+@pytest.fixture(scope="module")
+def workloads(ds):
+    return ds.workloads[:2]
+
+
+def _rec(i, v=None):
+    k = unit_key("x", {"i": i})
+    return k, {"kind": "x", "params": {"i": i}, "context": {},
+               "result": {"v": v if v is not None else i},
+               "elapsed_s": 0.01}
+
+
+def _fill(store, n=10):
+    for i in range(n):
+        k, rec = _rec(i)
+        store.put(k, rec)
+
+
+# ---------------------------------------------------------------------------
+# layout dispatch + backward compatibility
+# ---------------------------------------------------------------------------
+def test_open_store_dispatch(tmp_path):
+    assert isinstance(open_store(None), ResultStore)
+    assert isinstance(open_store(str(tmp_path / "a.jsonl")), ResultStore)
+    assert isinstance(open_store(str(tmp_path / "shards")),
+                      ShardedResultStore)
+    d = tmp_path / "existing.dir"
+    d.mkdir()
+    assert isinstance(open_store(str(d)), ShardedResultStore)
+
+
+def test_single_file_layout_still_readable(tmp_path):
+    """Stores written by the pre-sharding single-file code load
+    unchanged (same record format, one file, torn-tail tolerant)."""
+    path = str(tmp_path / "legacy.jsonl")
+    with open(path, "w") as f:
+        for i in range(5):
+            k, rec = _rec(i)
+            f.write(json.dumps(dict(rec, key=k)) + "\n")
+    store = open_store(path)
+    assert len(store) == 5
+    k, _ = _rec(3)
+    assert store.get(k)["result"] == {"v": 3}
+
+
+def test_sharded_roundtrip_and_manifest(tmp_path):
+    root = str(tmp_path / "shards")
+    s = ShardedResultStore(root, writer_id="w1")
+    _fill(s, 25)
+    with open(os.path.join(root, "MANIFEST.json")) as f:
+        assert json.load(f)["prefix_len"] == 2
+    # every shard file lives under a 2-hex-char prefix dir named by w1
+    for p in s._shard_files():
+        assert os.path.basename(p) == "w1.jsonl"
+        assert len(os.path.basename(os.path.dirname(p))) == 2
+    again = ShardedResultStore(root)
+    assert len(again) == 25
+    assert again.fingerprint() == s.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["file", "sharded"])
+def test_torn_trailing_line_skipped(tmp_path, layout):
+    if layout == "file":
+        store = ResultStore(str(tmp_path / "s.jsonl"))
+    else:
+        store = ShardedResultStore(str(tmp_path / "s"), writer_id="w1")
+    _fill(store, 6)
+    victim = (store.path if layout == "file"
+              else store._shard_files()[0])
+    with open(victim, "a") as f:
+        f.write('{"key": "torn-by-a-cra')          # crashed writer tail
+    reloaded = open_store(store.path if layout == "file" else store.root)
+    assert len(reloaded) == 6
+    assert reloaded.fingerprint() == store.fingerprint()
+
+
+@pytest.mark.parametrize("layout", ["file", "sharded"])
+def test_duplicate_keys_last_record_wins(tmp_path, layout):
+    if layout == "file":
+        store = ResultStore(str(tmp_path / "s.jsonl"))
+    else:
+        store = ShardedResultStore(str(tmp_path / "s"), writer_id="w1")
+    k, rec = _rec(1, v=111)
+    store.put(k, rec)
+    _, rec2 = _rec(1, v=222)
+    store.put(k, rec2)                             # same key, appended after
+    reloaded = open_store(store.path if layout == "file" else store.root)
+    assert len(reloaded) == 1
+    assert reloaded.get(k)["result"] == {"v": 222}
+
+
+def test_mixed_and_old_schema_records(tmp_path):
+    """Non-dict lines, keyless dicts and foreign/old-schema records must
+    not break loading; gc() then drops what cannot re-derive its key."""
+    path = str(tmp_path / "mixed.jsonl")
+    store = ResultStore(path)
+    _fill(store, 3)
+    with open(path, "a") as f:
+        f.write("[1, 2, 3]\n")                     # valid JSON, not a record
+        f.write('{"result": {"v": 9}}\n')          # dict without a key
+        f.write(json.dumps({                       # old-schema leftover:
+            "key": "0" * 64, "kind": "search",     # key hashed differently
+            "params": {"method": "rs"}, "context": {},
+            "result": {"values": [1.0]}}) + "\n")
+        f.write(json.dumps({                       # record missing result
+            "key": unit_key("y", {"j": 1}), "kind": "y",
+            "params": {"j": 1}, "context": {}}) + "\n")
+    reloaded = open_store(path)
+    assert len(reloaded) == 5                      # 3 live + 2 stale
+    assert reloaded.gc(dry_run=True) == 2
+    assert reloaded.gc() == 2
+    fresh = open_store(path)
+    assert len(fresh) == 3
+    k, _ = _rec(0)
+    assert fresh.get(k)["result"] == {"v": 0}
+
+
+def test_compact_preserves_unreadable_shards(tmp_path):
+    """Maintenance must never delete data it could not load: compact()
+    keeps unreadable shard files on disk for repair, and a single-file
+    store that failed to load refuses to compact at all."""
+    root = str(tmp_path / "shards")
+    s = ShardedResultStore(root, writer_id="w1")
+    _fill(s, 8)
+    victim = s._shard_files()[0]
+    with open(victim, "wb") as f:
+        f.write(b"\xff\xfe\x00\x01" * 64)           # now undecodable
+    damaged = ShardedResultStore(root)
+    assert victim in damaged.load_errors
+    damaged.compact()
+    assert os.path.exists(victim)                   # not deleted
+    # the single-file layout refuses instead (partial rewrite would
+    # truncate whatever the unreadable file still holds)
+    path = str(tmp_path / "s.jsonl")
+    with open(path, "wb") as f:
+        f.write(b"\xff\xfe\x00\x01" * 64)
+    broken = ResultStore(path)
+    assert broken.load_errors == [path]
+    with pytest.raises(RuntimeError, match="refusing to compact"):
+        broken.compact()
+
+
+def test_compact_spares_shards_grown_since_load(tmp_path):
+    """A concurrent writer appending between our load and our compact
+    must not have its records deleted: size-changed shards survive as
+    harmless duplicates instead of silent data loss."""
+    root = str(tmp_path / "shards")
+    writer_b = ShardedResultStore(root, writer_id="host-b")
+    _fill(writer_b, 4)
+    maint = ShardedResultStore(root, writer_id="maint")
+    b_file = [p for p in maint._shard_files() if "host-b" in p][0]
+    prefix = os.path.basename(os.path.dirname(b_file))
+    # host-b appends to that same shard file after maint's load snapshot
+    i = next(i for i in range(100, 10_000)
+             if unit_key("x", {"i": i})[:2] == prefix)
+    k, rec = _rec(i)
+    writer_b.put(k, rec)
+    assert writer_b._writer_path(k) == b_file
+    maint.compact()
+    assert os.path.exists(b_file)                   # spared, not deleted
+    recovered = ShardedResultStore(root)
+    assert len(recovered) == 5                      # nothing lost
+    assert recovered.get(k)["result"] == {"v": i}
+
+
+def test_merge_unreadable_source_shard_warns_not_crashes(tmp_path):
+    """An unreadable shard in a source must not abort the merge (even
+    into a single-file destination): readable records merge, the CLI
+    warns on stderr and exits nonzero."""
+    src = ShardedResultStore(str(tmp_path / "src"), writer_id="w1")
+    _fill(src, 6)
+    victim = src._shard_files()[0]
+    n_lost = sum(1 for _ in open(victim))
+    with open(victim, "wb") as f:
+        f.write(b"\xff\xfe\x00\x01" * 16)
+    out = str(tmp_path / "merged.jsonl")
+    r = _cli("merge", str(tmp_path / "src"), "--out", out)
+    assert r.returncode == 1, (r.stdout, r.stderr)
+    assert "unreadable shard" in r.stderr
+    assert len(open_store(out)) == 6 - n_lost
+
+
+def test_cli_maintenance_on_missing_store_errors(tmp_path):
+    """compact/gc/stat on a typo'd path must not create a fresh empty
+    store and report success against it."""
+    missing = str(tmp_path / "expstroe")           # typo'd, does not exist
+    for cmd in (("compact", missing), ("gc", missing), ("stat", missing)):
+        r = _cli(*cmd)
+        assert r.returncode == 2, (cmd, r.stdout)
+        assert "store not found" in r.stderr
+        assert not os.path.exists(missing)         # nothing created
+
+
+def test_cli_gc_unreadable_single_file_clean_error(tmp_path):
+    path = str(tmp_path / "broken.jsonl")
+    with open(path, "wb") as f:
+        f.write(b"\xff\xfe\x00\x01" * 16)
+    r = _cli("gc", path)
+    assert r.returncode == 2
+    assert "error: refusing to compact" in r.stderr
+    r = _cli("compact", path)
+    assert r.returncode == 2 and "error:" in r.stderr
+
+
+def test_merge_missing_source_raises(tmp_path):
+    """A typo'd host path must fail the merge loudly, not contribute a
+    silently empty store."""
+    a = ShardedResultStore(str(tmp_path / "a"), writer_id="w")
+    _fill(a, 3)
+    with pytest.raises(FileNotFoundError, match="no-such-host"):
+        merge_stores([str(tmp_path / "a"), str(tmp_path / "no-such-host")],
+                     str(tmp_path / "out.jsonl"))
+    r = _cli("merge", str(tmp_path / "a"), str(tmp_path / "no-such-host"),
+             "--out", str(tmp_path / "out.jsonl"))
+    assert r.returncode != 0
+
+
+def test_open_store_existing_file_without_suffix(tmp_path):
+    """An existing regular file is always the single-file layout, even
+    without a .jsonl suffix (e.g. units.jsonl.bak)."""
+    path = str(tmp_path / "units.jsonl.bak")
+    with open(path, "w") as f:
+        k, rec = _rec(0)
+        f.write(json.dumps(dict(rec, key=k)) + "\n")
+    store = open_store(path)
+    assert isinstance(store, ResultStore)
+    assert len(store) == 1
+
+
+def test_unreadable_shard_file_skipped(tmp_path):
+    root = str(tmp_path / "shards")
+    s = ShardedResultStore(root, writer_id="w1")
+    _fill(s, 8)
+    prefix_dir = os.path.dirname(s._shard_files()[0])
+    # a directory masquerading as a shard file: open() raises OSError
+    os.mkdir(os.path.join(prefix_dir, "zz-broken.jsonl"))
+    # and an undecodable binary blob
+    with open(os.path.join(prefix_dir, "zz-binary.jsonl"), "wb") as f:
+        f.write(b"\xff\xfe\x00\x01" * 64)
+    reloaded = ShardedResultStore(root)
+    assert len(reloaded) == 8
+    assert any("zz-broken" in p for p in reloaded.load_errors)
+
+
+def _append_worker(root, writer_tag, lo, hi):
+    store = ShardedResultStore(root, writer_id=writer_tag)
+    for i in range(lo, hi):
+        k, rec = _rec(i)
+        store.put(k, rec)
+
+
+def test_concurrent_multiprocess_appends(tmp_path):
+    """N writer processes hammer one sharded root concurrently; no
+    record is lost or torn because no two writers share a file."""
+    root = str(tmp_path / "shards")
+    ctx = multiprocessing.get_context("fork")
+    procs = [ctx.Process(target=_append_worker,
+                         args=(root, f"writer-{w}", w * 25, (w + 1) * 25))
+             for w in range(4)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+        assert p.exitcode == 0
+    store = ShardedResultStore(root)
+    assert len(store) == 100
+    assert store.load_errors == []
+    for i in range(100):
+        k, _ = _rec(i)
+        assert store.get(k)["result"] == {"v": i}
+    # per-writer isolation: every shard file belongs to exactly one writer
+    writers = {os.path.basename(p) for p in store._shard_files()}
+    assert writers <= {f"writer-{w}.jsonl" for w in range(4)}
+
+
+# ---------------------------------------------------------------------------
+# merge / compact / gc via the python -m repro.exp CLI
+# ---------------------------------------------------------------------------
+def _cli(*args):
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-m", "repro.exp", *args],
+                          capture_output=True, text=True, env=env)
+
+
+def test_cli_merge_compact_gc_stat(tmp_path):
+    a = ShardedResultStore(str(tmp_path / "hostA"), writer_id="a-1")
+    b = ShardedResultStore(str(tmp_path / "hostB"), writer_id="b-1")
+    for i in range(6):
+        k, rec = _rec(i)
+        (a if i < 3 else b).put(k, rec)
+    merged = str(tmp_path / "merged.jsonl")
+    r = _cli("merge", str(tmp_path / "hostA"), str(tmp_path / "hostB"),
+             "--out", merged)
+    assert r.returncode == 0, r.stderr
+    assert "6 records" in r.stdout
+    store = open_store(merged)
+    assert len(store) == 6
+
+    r = _cli("compact", merged)
+    assert r.returncode == 0, r.stderr
+    assert len(open_store(merged)) == 6
+
+    with open(merged, "a") as f:                   # inject a stale row
+        f.write(json.dumps({"key": "f" * 64, "kind": "x", "params": {},
+                            "context": {}, "result": {}}) + "\n")
+    r = _cli("gc", merged, "--dry-run")
+    assert r.returncode == 0 and "would drop 1" in r.stdout
+    r = _cli("gc", merged)
+    assert r.returncode == 0 and "dropped 1" in r.stdout
+    assert len(open_store(merged)) == 6
+
+    r = _cli("stat", merged)
+    assert r.returncode == 0
+    assert "6 records" in r.stdout and "fingerprint:" in r.stdout
+
+
+def test_merge_is_order_insensitive_for_content(tmp_path):
+    a = ShardedResultStore(str(tmp_path / "a"), writer_id="w")
+    b = ShardedResultStore(str(tmp_path / "b"), writer_id="w")
+    _fill(a, 5)
+    for i in range(5, 9):
+        k, rec = _rec(i)
+        b.put(k, rec)
+    ab = merge_stores([str(tmp_path / "a"), str(tmp_path / "b")],
+                      str(tmp_path / "ab"))
+    ba = merge_stores([str(tmp_path / "b"), str(tmp_path / "a")],
+                      str(tmp_path / "ba.jsonl"))
+    assert len(ab) == len(ba) == 9
+    assert ab.fingerprint() == ba.fingerprint()    # layout-independent
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sweep split across >= 2 writer processes, merged via the
+# CLI, replays bit-identically to a single-writer single-file run
+# ---------------------------------------------------------------------------
+def _sweep_worker(root, methods, workloads):
+    ds = build_dataset()
+    engine = make_engine(ds, store=ShardedResultStore(root))
+    regret_curves(ds, methods, BUDGETS, SEEDS, "cost", workloads,
+                  engine=engine)
+
+
+def test_multiwriter_merge_replays_bit_identically(ds, workloads, tmp_path):
+    shared = str(tmp_path / "multihost")
+    ctx = multiprocessing.get_context("fork")
+    # two writer processes share one store root, splitting the methods
+    procs = [ctx.Process(target=_sweep_worker,
+                         args=(shared, (m,), list(workloads)))
+             for m in METHODS]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+        assert p.exitcode == 0
+    # two distinct writers actually wrote
+    sharded = ShardedResultStore(shared)
+    writers = {os.path.basename(p) for p in sharded._shard_files()}
+    assert len(writers) == 2
+
+    merged = str(tmp_path / "merged.jsonl")
+    r = _cli("merge", shared, "--out", merged)
+    assert r.returncode == 0, r.stderr
+
+    # single-writer single-file reference run
+    ref_path = str(tmp_path / "ref.jsonl")
+    ref_engine = make_engine(ds, store_path=ref_path)
+    ref = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
+                        engine=ref_engine)
+    assert ref_engine.stats.computed > 0
+
+    # replay from the merged store: zero recompute, bit-identical curves
+    replay_engine = make_engine(ds, store=open_store(merged))
+    replay = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
+                           engine=replay_engine)
+    assert replay_engine.stats.computed == 0
+    assert replay_engine.stats.cached == replay_engine.stats.unique
+    assert replay == ref                           # exact float equality
+    # and the merged store is semantically identical to the reference's
+    assert open_store(merged).fingerprint() == \
+        open_store(ref_path).fingerprint()

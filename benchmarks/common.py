@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import csv
 import os
+import sys
 from typing import Iterable, List, Sequence
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -31,14 +32,33 @@ def unit_store(store_dir: str = None):
 
 
 def figure_engine(dataset, workers: int = 1, store=None,
-                  executor: str = None, store_dir: str = None):
+                  executor: str = None, store_dir: str = None,
+                  hosts: str = None, timeout: float = None,
+                  retries: int = 0):
     """One engine wiring for every figure benchmark: shared on-disk unit
-    store (cross-figure reuse) unless the caller injects its own, and a
-    selectable executor backend (serial/thread/process)."""
+    store (cross-figure reuse) unless the caller injects its own, a
+    selectable executor backend (serial/thread/process/remote, with
+    ``hosts`` for remote transports), and the engine's fault-tolerance
+    budget (``timeout`` per unit, ``retries`` extra attempts)."""
     from repro.exp import make_engine
     return make_engine(dataset, workers=workers, executor=executor,
+                       executor_kwargs={"hosts": hosts} if hosts else None,
+                       unit_timeout_s=timeout, retries=retries,
                        store=store if store is not None
                        else unit_store(store_dir))
+
+
+def report_engine(name: str, engine) -> None:
+    """One machine-checkable stderr line per figure run: CI parses it to
+    assert e.g. that a resume run replayed everything (computed=0) and
+    that fault-injected runs stayed within their retry budgets."""
+    lt = engine.lifetime
+    print(f"[exp] {name}: units={lt.total} unique={lt.unique} "
+          f"cached={lt.cached} computed={lt.computed} failed={lt.failed} "
+          f"retried={lt.retried}", file=sys.stderr, flush=True)
+    for failure in lt.failures:
+        print(f"[exp] {name}: FAILED unit {failure}", file=sys.stderr,
+              flush=True)
 
 
 def out_path(name: str) -> str:

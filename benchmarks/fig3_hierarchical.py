@@ -7,7 +7,7 @@ are replayed from the store, not recomputed.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, figure_engine, write_rows
+from benchmarks.common import emit, figure_engine, report_engine, write_rows
 from repro.exp import regret_curves
 from repro.multicloud import build_dataset
 
@@ -18,29 +18,37 @@ BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
 
 
 def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
-        executor: str = None, store_dir: str = None):
+        executor: str = None, store_dir: str = None, hosts: str = None,
+        timeout: float = None, retries: int = 0):
     ds = build_dataset()
     engine = figure_engine(ds, workers=workers, store=store,
-                           executor=executor, store_dir=store_dir)
+                           executor=executor, store_dir=store_dir,
+                           hosts=hosts, timeout=timeout, retries=retries)
     workloads = ds.workloads[::3] if quick else ds.workloads
     out = []
-    for target in ("cost", "time"):
-        curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
-                               workloads, engine=engine)
-        # recorded per-unit compute time (replay-stable; see fig2_sota)
-        per_iter = engine.stats.unit_elapsed_s / (
-            len(METHODS) * len(workloads) * len(seeds) * max(BUDGETS)) * 1e6
-        for m, c in curves.items():
-            for b, r in zip(BUDGETS, c):
-                out.append([f"fig3.{target}.{m}.B{b}",
-                            round(per_iter, 1), round(r, 4)])
+    with engine:
+        for target in ("cost", "time"):
+            curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
+                                   workloads, engine=engine)
+            # recorded per-unit compute time (replay-stable; see
+            # fig2_sota)
+            per_iter = engine.stats.unit_elapsed_s / (
+                len(METHODS) * len(workloads) * len(seeds)
+                * max(BUDGETS)) * 1e6
+            for m, c in curves.items():
+                for b, r in zip(BUDGETS, c):
+                    out.append([f"fig3.{target}.{m}.B{b}",
+                                round(per_iter, 1), round(r, 4)])
+    report_engine(NAME, engine)
     return write_rows(NAME, ("name", "us_per_call", "derived"), out)
 
 
 def main(quick: bool = False, workers: int = 1, executor: str = None,
-         store_dir: str = None) -> None:
+         store_dir: str = None, hosts: str = None, timeout: float = None,
+         retries: int = 0) -> None:
     emit(run(quick=quick, workers=workers, executor=executor,
-             store_dir=store_dir))
+             store_dir=store_dir, hosts=hosts, timeout=timeout,
+             retries=retries))
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, figure_engine, write_rows
+from benchmarks.common import emit, figure_engine, report_engine, write_rows
 from repro.exp import savings_distribution
 from repro.multicloud import build_dataset
 
@@ -18,36 +18,42 @@ METHODS = ("smac", "cb_rbfopt", "random", "exhaustive")
 
 
 def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
-        executor: str = None, store_dir: str = None):
+        executor: str = None, store_dir: str = None, hosts: str = None,
+        timeout: float = None, retries: int = 0):
     ds = build_dataset()
     engine = figure_engine(ds, workers=workers, store=store,
-                           executor=executor, store_dir=store_dir)
+                           executor=executor, store_dir=store_dir,
+                           hosts=hosts, timeout=timeout, retries=retries)
     workloads = ds.workloads[::3] if quick else ds.workloads
     out = []
-    for target in ("cost", "time"):
-        for m in METHODS:
-            s = savings_distribution(
-                ds, m, budget=33, n_production=64, seeds=seeds,
-                target=target, workloads=workloads, engine=engine)
-            out.append([
-                f"fig4.{target}.{m}.median", "",
-                round(float(np.median(s)), 4)])
-            out.append([
-                f"fig4.{target}.{m}.q25", "",
-                round(float(np.percentile(s, 25)), 4)])
-            out.append([
-                f"fig4.{target}.{m}.q75", "",
-                round(float(np.percentile(s, 75)), 4)])
-            out.append([
-                f"fig4.{target}.{m}.frac_negative", "",
-                round(float(np.mean(s < 0)), 4)])
+    with engine:
+        for target in ("cost", "time"):
+            for m in METHODS:
+                s = savings_distribution(
+                    ds, m, budget=33, n_production=64, seeds=seeds,
+                    target=target, workloads=workloads, engine=engine)
+                out.append([
+                    f"fig4.{target}.{m}.median", "",
+                    round(float(np.median(s)), 4)])
+                out.append([
+                    f"fig4.{target}.{m}.q25", "",
+                    round(float(np.percentile(s, 25)), 4)])
+                out.append([
+                    f"fig4.{target}.{m}.q75", "",
+                    round(float(np.percentile(s, 75)), 4)])
+                out.append([
+                    f"fig4.{target}.{m}.frac_negative", "",
+                    round(float(np.mean(s < 0)), 4)])
+    report_engine(NAME, engine)
     return write_rows(NAME, ("name", "us_per_call", "derived"), out)
 
 
 def main(quick: bool = False, workers: int = 1, executor: str = None,
-         store_dir: str = None) -> None:
+         store_dir: str = None, hosts: str = None, timeout: float = None,
+         retries: int = 0) -> None:
     emit(run(quick=quick, workers=workers, executor=executor,
-             store_dir=store_dir))
+             store_dir=store_dir, hosts=hosts, timeout=timeout,
+             retries=retries))
 
 
 if __name__ == "__main__":

@@ -23,12 +23,22 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=1,
                     help="executor width for engine-backed figures")
     ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process"),
+                    choices=("serial", "thread", "process", "remote"),
                     help="engine backend (default: serial at --workers 1, "
                          "process pool above)")
     ap.add_argument("--store-dir", default=None,
                     help="sharded result-store directory (multi-host safe) "
                          "instead of the default single-file store")
+    ap.add_argument("--hosts", default=None,
+                    help="remote executor host spec, e.g. "
+                         "'local*4,ssh:user@gpu1*8' (default: --workers "
+                         "local subprocess workers)")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-unit wall-clock budget in seconds "
+                         "(operational: never invalidates the store)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="extra attempts per unit after a failure/timeout "
+                         "before it is surfaced as a structured failure")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
@@ -43,7 +53,8 @@ def main() -> None:
             continue
         kwargs = {"quick": args.quick}
         accepted = inspect.signature(mod.main).parameters
-        for opt in ("workers", "executor", "store_dir"):
+        for opt in ("workers", "executor", "store_dir", "hosts",
+                    "timeout", "retries"):
             if opt in accepted:
                 kwargs[opt] = getattr(args, opt)
         try:

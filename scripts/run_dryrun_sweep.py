@@ -43,15 +43,23 @@ def cells(meshes):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--meshes", default="pod,multipod")
-    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--timeout", type=float, default=3600,
+                    help="per-cell wall-clock budget; routed through the "
+                         "engine timeout config down to the subprocess "
+                         "kill (operational: never invalidates the store)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="extra attempts per cell after a failure/timeout")
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--workers", type=int, default=1,
                     help="concurrent dry-run cells")
     ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process"),
+                    choices=("serial", "thread", "process", "remote"),
                     help="engine backend; cells are subprocesses, so "
                          "'thread' parallelizes them without a process "
                          "pool (default: serial/process from --workers)")
+    ap.add_argument("--hosts", default=None,
+                    help="remote executor host spec, e.g. "
+                         "'local*2,ssh:user@host*8'")
     ap.add_argument("--store-dir", default=None,
                     help="sharded result-store directory (multi-host "
                          "safe) instead of the single-file default")
@@ -70,12 +78,18 @@ def main():
 
     engine = ExperimentEngine(
         dryrun_runner,
-        local_context={"out_dir": OUT, "timeout": args.timeout,
+        # --timeout reaches the runner's subprocess kill through the
+        # engine's timeout config (injected into the runner context as
+        # unit_timeout_s), not a hand-carried local_context key
+        local_context={"out_dir": OUT,
                        "src_path": os.path.join(ROOT, "src")},
+        unit_timeout_s=args.timeout, retries=args.retries,
+        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
         store=open_store(args.store_dir or STORE), workers=args.workers,
         executor=args.executor, verbose=True)
     t0 = time.time()
-    results = engine.run(units)
+    with engine:
+        results = engine.run(units)
     # re-materialize per-cell JSONs that downstream consumers (hillclimb,
     # render_experiments) read, for cells replayed from the store after
     # results/dryrun/ was cleaned

@@ -47,9 +47,16 @@ def main():
                     help="concurrent hillclimb cells")
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process"),
+                    choices=("serial", "thread", "process", "remote"),
                     help="engine backend (default: serial/process from "
                          "--workers)")
+    ap.add_argument("--hosts", default=None,
+                    help="remote executor host spec, e.g. "
+                         "'local*2,ssh:user@host*8'")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-cell wall-clock budget in seconds")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="extra attempts per cell after a failure/timeout")
     ap.add_argument("--store-dir", default=None,
                     help="sharded result-store directory (multi-host "
                          "safe) instead of the single-file default")
@@ -71,10 +78,13 @@ def main():
                        "dryrun_dir": os.path.join(ROOT, "results", "dryrun"),
                        "why_by_cell": {f"{a}.{s}": w
                                        for a, s, _d, _b, w in CELLS}},
+        unit_timeout_s=args.timeout, retries=args.retries,
+        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
         store=open_store(args.store_dir or STORE), workers=args.workers,
         executor=args.executor, verbose=True)
     t0 = time.time()
-    results = engine.run(units)
+    with engine:
+        results = engine.run(units)
     for res in results:
         if res:
             print(f"    {res['tag']}: best t={res['best_t_step']:.3f}s "

@@ -1,20 +1,24 @@
 """Parallel, cached, resumable experiment engine (see engine.py)."""
 from repro.exp.engine import EngineStats, ExperimentEngine, WorkUnit
 from repro.exp.executors import (
-    EXECUTORS, BaseExecutor, ProcessExecutor, SerialExecutor, ThreadExecutor,
-    make_executor)
+    EXECUTORS, BaseExecutor, LocalSubprocessTransport, ProcessExecutor,
+    RemoteExecutor, SerialExecutor, SSHTransport, ThreadExecutor,
+    WorkerTransport, make_executor, parse_hosts)
 from repro.exp.protocols import (
     BUDGET_COUPLED, make_engine, predictive_regret, regret_curves,
     savings_distribution)
 from repro.exp.store import (
     BaseResultStore, ResultStore, ShardedResultStore, merge_stores,
     open_store, unit_key)
+from repro.exp.wire import RemoteTaskError, UnitTimeout, WorkerDied
 
 __all__ = [
     "BUDGET_COUPLED", "BaseExecutor", "BaseResultStore", "EXECUTORS",
-    "EngineStats", "ExperimentEngine", "ProcessExecutor", "ResultStore",
-    "SerialExecutor", "ShardedResultStore", "ThreadExecutor", "WorkUnit",
-    "make_engine", "make_executor", "merge_stores", "open_store",
-    "predictive_regret", "regret_curves", "savings_distribution",
-    "unit_key",
+    "EngineStats", "ExperimentEngine", "LocalSubprocessTransport",
+    "ProcessExecutor", "RemoteExecutor", "RemoteTaskError", "ResultStore",
+    "SSHTransport", "SerialExecutor", "ShardedResultStore",
+    "ThreadExecutor", "UnitTimeout", "WorkUnit", "WorkerDied",
+    "WorkerTransport", "make_engine", "make_executor", "merge_stores",
+    "open_store", "parse_hosts", "predictive_regret", "regret_curves",
+    "savings_distribution", "unit_key",
 ]

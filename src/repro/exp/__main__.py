@@ -8,9 +8,18 @@ sharded directory — detected from the path):
     multi-host sweep workflow: every host runs with its own
     ``--store-dir`` (or its own writer files in a shared directory),
     then one merge produces the store all hosts replay from.
-``compact STORE``
+``compact STORE [--workers N --executor thread|process]``
     Rewrite to exactly one record per key in deterministic key order,
     dropping torn lines, superseded duplicates, and stale writer files.
+    On a sharded store, ``--workers > 1`` compacts hash-prefixes in
+    parallel through the executor registry (million-record stores are
+    IO-bound: ``thread`` is the usual pick; ``remote`` is rejected —
+    prefix shards must land on the caller's filesystem).
+``worker [--heartbeat S]``
+    Run a remote-execution worker speaking the framed JSONL protocol
+    over stdin/stdout (see :mod:`repro.exp.worker`) — spawned by
+    :class:`~repro.exp.executors.RemoteExecutor` over a local pipe or
+    an SSH channel, not normally started by hand.
 ``gc STORE [--dry-run]``
     Drop records that no longer re-derive their own content key
     (old-schema leftovers, hand-edited rows) or lack a result payload,
@@ -59,14 +68,26 @@ def _cmd_merge(args: argparse.Namespace) -> int:
 
 
 def _cmd_compact(args: argparse.Namespace) -> int:
+    from repro.exp.store import ShardedResultStore
     try:
         store = _open_existing(args.store)
-        store.compact()
+        if isinstance(store, ShardedResultStore):
+            store.compact(executor=args.executor, workers=args.workers)
+        else:
+            if args.workers > 1 or args.executor:
+                print("note: parallel compaction applies to sharded "
+                      "stores only; compacting serially", file=sys.stderr)
+            store.compact()
     except (FileNotFoundError, RuntimeError) as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2
     print(f"compacted {args.store}: {len(store)} records")
     return _warn_load_errors(store, "compacted")
+
+
+def _cmd_worker(args: argparse.Namespace) -> int:
+    from repro.exp.worker import main as worker_main
+    return worker_main(["--heartbeat", str(args.heartbeat)])
 
 
 def _cmd_gc(args: argparse.Namespace) -> int:
@@ -111,6 +132,14 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("compact", help="dedup + canonicalize a store")
     p.add_argument("store")
+    p.add_argument("--workers", type=int, default=1,
+                   help="parallel per-prefix compaction width "
+                        "(sharded stores)")
+    p.add_argument("--executor", default=None,
+                   choices=("serial", "thread", "process"),
+                   help="executor backend for parallel compaction "
+                        "(local backends only; default: thread when "
+                        "--workers > 1)")
     p.set_defaults(fn=_cmd_compact)
 
     p = sub.add_parser("gc", help="drop stale/undecodable records")
@@ -121,6 +150,12 @@ def main(argv=None) -> int:
     p = sub.add_parser("stat", help="record counts + content fingerprint")
     p.add_argument("store")
     p.set_defaults(fn=_cmd_stat)
+
+    p = sub.add_parser("worker", help="remote execution worker "
+                                      "(framed JSONL over stdio)")
+    p.add_argument("--heartbeat", type=float, default=2.0,
+                   help="seconds between heartbeats (0 disables)")
+    p.set_defaults(fn=_cmd_worker)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -30,6 +30,8 @@ def make_engine(dataset, *, workers: int = 1,
                 store_path: Optional[str] = None,
                 store_dir: Optional[str] = None,
                 executor: ExecutorSpec = None,
+                executor_kwargs: Optional[dict] = None,
+                unit_timeout_s: Optional[float] = None, retries: int = 0,
                 mp_context: Optional[str] = None) -> ExperimentEngine:
     """Engine wired for offline-dataset search units.
 
@@ -37,13 +39,18 @@ def make_engine(dataset, *, workers: int = 1,
     dataset rebuilt with another seed never replays stale results.
     ``store_dir`` selects the sharded multi-writer layout; ``store_path``
     the single-file one; ``store`` injects any prebuilt store.
+    ``unit_timeout_s``/``retries`` are the engine's fault-tolerance
+    budget (operational — they never touch content hashes);
+    ``executor_kwargs`` reaches the backend constructor (e.g. ``hosts=``
+    for the remote executor).
     """
     if store is None:
         store = open_store(store_dir) if store_dir else ResultStore(store_path)
     return ExperimentEngine(
         search_runner, context={"dataset_seed": int(dataset.seed)},
         store=store, workers=workers, executor=executor,
-        mp_context=mp_context)
+        executor_kwargs=executor_kwargs, unit_timeout_s=unit_timeout_s,
+        retries=retries, mp_context=mp_context)
 
 
 def _search_unit(method: str, workload: str, target: str, seed: int,

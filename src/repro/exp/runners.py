@@ -43,6 +43,23 @@ def search_runner(kind: str, params: Dict[str, Any],
     raise ValueError(f"unknown unit kind {kind!r}")
 
 
+def subprocess_timeout(context: Dict[str, Any],
+                       default: float = 3600.0) -> float:
+    """Wall-clock budget for a subprocess-spawning runner.
+
+    The engine injects its ``unit_timeout_s`` config into every runner's
+    context, so the CLI ``--timeout`` reaches subprocess runners through
+    one path; the legacy ``context["timeout"]`` key is honored for old
+    callers that set it directly.  Runners enforce this tightly
+    themselves (a subprocess kill beats the engine watchdog's grace
+    window and produces a richer error).
+    """
+    timeout = context.get("unit_timeout_s")
+    if timeout is None:
+        timeout = context.get("timeout", default)
+    return float(timeout)
+
+
 # ---------------------------------------------------------------------------
 # Dry-run sweep units (one XLA compile cell per unit, via subprocess —
 # each cell needs the 512-device XLA flag set before jax imports)
@@ -79,7 +96,7 @@ def dryrun_runner(kind: str, params: Dict[str, Any],
     env["PYTHONPATH"] = context.get("src_path", "src")
     try:
         r = subprocess.run(cmd, capture_output=True, text=True,
-                           timeout=int(context.get("timeout", 3600)),
+                           timeout=subprocess_timeout(context),
                            env=env)
     except subprocess.TimeoutExpired:
         with open(err, "w") as f:

@@ -36,14 +36,17 @@ import hashlib
 import json
 import os
 import socket
-from typing import Any, Dict, Iterable, List, Mapping, Optional, Union
+from typing import (
+    Any, Dict, Iterable, List, Mapping, Optional, Tuple, Union)
 
 #: bump when the record format or unit semantics change incompatibly
 SCHEMA_VERSION = 1
 
 #: record fields excluded from content fingerprints: operational
 #: measurements that legitimately differ between identical re-runs
-VOLATILE_FIELDS = ("elapsed_s",)
+#: (timings, and how many attempts the engine's retry budget spent
+#: before the unit succeeded)
+VOLATILE_FIELDS = ("elapsed_s", "attempts")
 
 
 def unit_key(kind: str, params: Mapping[str, Any],
@@ -303,6 +306,13 @@ class ShardedResultStore(BaseResultStore):
             f.write(json.dumps(record, default=str) + "\n")
             f.flush()
 
+    def _compact_plan(self) -> Dict[str, List[dict]]:
+        by_prefix: Dict[str, List[dict]] = {}
+        for rec in self.records():
+            by_prefix.setdefault(rec["key"][:self.prefix_len],
+                                 []).append(rec)
+        return by_prefix
+
     def _safe_to_delete(self, path: str) -> bool:
         """A shard may be deleted after compaction only if every record
         it holds is in memory: our own writer file always qualifies
@@ -320,33 +330,54 @@ class ShardedResultStore(BaseResultStore):
         except OSError:
             return False
 
-    def compact(self) -> None:
+    def compact(self, executor: Optional[str] = None,
+                workers: Optional[int] = None) -> None:
         """Collapse every prefix's writer files into one ``_compact``
-        shard holding exactly the live records, key-sorted."""
+        shard holding exactly the live records, key-sorted.
+
+        Prefixes are independent (no record ever crosses a prefix
+        directory), so with ``workers > 1`` the per-prefix rewrites fan
+        out through the executor registry — the same local backends the
+        engine uses (``executor`` defaults to ``thread``, the right
+        choice for this IO-bound work).  ``remote`` is rejected: prefix
+        jobs write files relative to the caller's filesystem, and a
+        worker on another host would write them *there* while the
+        caller deletes the local shards it believes were rewritten.
+        Shard bookkeeping (which stale files are safe to delete) stays
+        in the caller, where the load-time size snapshots live —
+        workers only ever write fresh ``_compact`` files, so a crashed
+        or killed parallel compaction leaves at worst a stale ``.tmp``
+        alongside intact data.
+        """
+        if executor == "remote":
+            raise ValueError(
+                "parallel compaction is local-only (thread/process): "
+                "prefix shards must be written on the caller's "
+                "filesystem")
         os.makedirs(self.root, exist_ok=True)
         self._write_manifest()
-        by_prefix: Dict[str, List[dict]] = {}
-        for rec in self.records():
-            by_prefix.setdefault(rec["key"][:self.prefix_len],
-                                 []).append(rec)
+        by_prefix = self._compact_plan()
         # never delete shards whose records may not all be in memory:
         # failed-to-load files (repair/inspection material) and files a
         # concurrent writer touched since our load — removal would be
         # silent data loss
         stale = {p for p in self._shard_files()
                  if p not in self.load_errors and self._safe_to_delete(p)}
-        for prefix, recs in by_prefix.items():
-            d = os.path.join(self.root, prefix)
-            os.makedirs(d, exist_ok=True)
-            tmp = os.path.join(d, "_compact.jsonl.tmp")
-            with open(tmp, "w") as f:
-                for rec in recs:
-                    f.write(json.dumps(rec, default=str) + "\n")
-            final = os.path.join(d, "_compact.jsonl")
-            os.replace(tmp, final)
+        jobs = sorted(by_prefix.items())
+        if workers and int(workers) > 1 and len(jobs) > 1:
+            from repro.exp.executors import make_executor
+            with make_executor(executor or "thread",
+                               workers=int(workers)) as ex:
+                futs = [ex.submit(_compact_prefix_job, self.root, prefix,
+                                  recs) for prefix, recs in jobs]
+                written = [f.result() for f in ex.as_completed(futs)]
+        else:
+            written = [_compact_prefix_job(self.root, prefix, recs)
+                       for prefix, recs in jobs]
+        for final, size in written:
             # freshly written from memory: fully covered, hence safe for
             # a later compact/gc in this process to delete or replace
-            self._loaded_sizes[final] = os.path.getsize(final)
+            self._loaded_sizes[final] = size
             stale.discard(final)
         for path in stale:
             try:
@@ -357,6 +388,24 @@ class ShardedResultStore(BaseResultStore):
             d = os.path.join(self.root, sub)
             if os.path.isdir(d) and not os.listdir(d):
                 os.rmdir(d)
+
+
+def _compact_prefix_job(root: str, prefix: str,
+                        records: List[dict]) -> Tuple[str, int]:
+    """Rewrite one prefix directory's canonical ``_compact.jsonl`` from
+    the given (already key-sorted) records.  Module-level and built from
+    plain JSON records so any executor backend — thread, process, or
+    remote worker — can run it; returns ``(final_path, size)`` for the
+    caller's shard bookkeeping."""
+    d = os.path.join(root, prefix)
+    os.makedirs(d, exist_ok=True)
+    tmp = os.path.join(d, "_compact.jsonl.tmp")
+    with open(tmp, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec, default=str) + "\n")
+    final = os.path.join(d, "_compact.jsonl")
+    os.replace(tmp, final)
+    return final, os.path.getsize(final)
 
 
 def open_store(path: Optional[str]) -> BaseResultStore:

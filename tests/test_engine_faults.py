@@ -1,0 +1,213 @@
+"""Engine fault-tolerance semantics: per-unit wall-clock timeouts,
+retry budgets, structured failure surfacing, resume of partial results,
+and the invariant that attempt/timing metadata is operational — it never
+changes a unit's content hash or a store's fingerprint."""
+import os
+import time
+
+import pytest
+
+from repro.exp import (
+    ExperimentEngine, ResultStore, UnitTimeout, WorkUnit, unit_key)
+from repro.exp.runners import subprocess_timeout
+from repro.exp.store import VOLATILE_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# module-level runners (picklable / wire-shippable by reference)
+# ---------------------------------------------------------------------------
+def _fault_runner(kind, params, context):
+    mode = params.get("mode", "ok")
+    if mode == "hang":
+        time.sleep(30)
+    if mode == "raise":
+        raise RuntimeError("deliberate")
+    if mode == "flaky":
+        # fails until `passes_at` attempts have been made; attempt count
+        # is communicated through the filesystem (survives any backend)
+        marker = os.path.join(context["marker_dir"], f"u{params['i']}")
+        with open(marker, "a") as f:
+            f.write("x")
+        if os.path.getsize(marker) < int(params["passes_at"]):
+            raise RuntimeError("transient")
+    return {"v": int(params["i"])}
+
+
+def _ctx_probe_runner(kind, params, context):
+    return {"unit_timeout_s": context.get("unit_timeout_s")}
+
+
+def _units(n, mode="ok", **extra):
+    return [WorkUnit.make("x", i=i, mode=mode, **extra) for i in range(n)]
+
+
+def _engine(store=None, **kw):
+    kw.setdefault("timeout_grace_s", 0.0)
+    return ExperimentEngine(_fault_runner,
+                            store=store if store is not None
+                            else ResultStore(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# timeouts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["serial", "thread"])
+def test_hanging_unit_exhausts_budget(executor):
+    eng = _engine(executor=executor, workers=2, unit_timeout_s=0.15,
+                  retries=2)
+    out = eng.run(_units(2) + _units(1, mode="hang"))
+    assert out[:2] == [{"v": 0}, {"v": 1}] and out[2] is None
+    assert eng.stats.computed == 2 and eng.stats.failed == 1
+    assert eng.stats.retried == 2                 # budget fully spent
+    [failure] = eng.stats.failures
+    assert failure["attempts"] == 3               # 1 try + 2 retries
+    assert failure["error_type"] == "UnitTimeout"
+    assert failure["params"]["mode"] == "hang"
+    assert "after 3 attempts" in eng.stats.errors[0]
+
+
+def test_timeout_grace_lets_slow_units_finish():
+    def check(timeout, grace, ok):
+        eng = ExperimentEngine(_slow_runner, store=ResultStore(),
+                               unit_timeout_s=timeout,
+                               timeout_grace_s=grace)
+        out = eng.run([WorkUnit.make("x", i=0)])
+        assert (out[0] is not None) is ok
+
+    check(0.05, 5.0, True)      # watchdog waits out the grace window
+    check(0.05, 0.0, False)     # no grace: hard stop at the budget
+
+
+def _slow_runner(kind, params, context):
+    time.sleep(0.3)
+    return {"v": 1}
+
+
+def test_unit_timeout_reaches_runner_context():
+    eng = ExperimentEngine(_ctx_probe_runner, store=ResultStore(),
+                           unit_timeout_s=12.5)
+    out = eng.run([WorkUnit.make("probe", i=0)])
+    assert out[0] == {"unit_timeout_s": 12.5}
+    # identity is untouched: same unit hashed with and without a timeout
+    bare = ExperimentEngine(_ctx_probe_runner, store=ResultStore())
+    assert (bare.key_for(WorkUnit.make("probe", i=0))
+            == eng.key_for(WorkUnit.make("probe", i=0)))
+
+
+def test_subprocess_timeout_routing():
+    # engine-injected budget wins; legacy context key honored; default
+    assert subprocess_timeout({"unit_timeout_s": 5, "timeout": 7}) == 5.0
+    assert subprocess_timeout({"timeout": 7}) == 7.0
+    assert subprocess_timeout({}) == 3600.0
+
+
+# ---------------------------------------------------------------------------
+# retry budget
+# ---------------------------------------------------------------------------
+def test_raising_unit_exhausts_retry_budget():
+    eng = _engine(retries=3)
+    out = eng.run(_units(1, mode="raise"))
+    assert out == [None]
+    assert eng.stats.failed == 1 and eng.stats.retried == 3
+    [failure] = eng.stats.failures
+    assert failure["attempts"] == 4
+    assert failure["error_type"] == "RuntimeError"
+    assert failure["error"] == "deliberate"
+
+
+def test_flaky_unit_succeeds_within_budget(tmp_path):
+    eng = ExperimentEngine(_fault_runner, store=ResultStore(),
+                           local_context={"marker_dir": str(tmp_path)},
+                           retries=2)
+    out = eng.run(_units(1, mode="flaky", passes_at=2))
+    assert out == [{"v": 0}]
+    assert eng.stats.failed == 0 and eng.stats.retried == 1
+    [rec] = list(eng.store.records())
+    assert rec["attempts"] == 2                   # recorded on the record
+
+
+def test_zero_retries_is_historical_single_attempt():
+    eng = _engine()
+    eng.run(_units(1, mode="raise"))
+    assert eng.stats.failed == 1 and eng.stats.retried == 0
+    assert eng.stats.failures[0]["attempts"] == 1
+
+
+# ---------------------------------------------------------------------------
+# resume + metadata invariants
+# ---------------------------------------------------------------------------
+def test_partial_results_survive_resume(tmp_path):
+    path = str(tmp_path / "store.jsonl")
+    units = _units(4) + _units(1, mode="hang")
+    eng = _engine(store=ResultStore(path), unit_timeout_s=0.15)
+    out = eng.run(units)
+    assert out[:4] == [{"v": i} for i in range(4)] and out[4] is None
+
+    # fresh engine, same store: successes replay, only the hanger reruns
+    eng2 = _engine(store=ResultStore(path), unit_timeout_s=0.15)
+    out2 = eng2.run(units)
+    assert out2 == out
+    assert eng2.stats.cached == 4 and eng2.stats.computed == 0
+    assert eng2.stats.failed == 1
+
+
+def test_attempt_metadata_never_changes_content_hash(tmp_path):
+    """attempts (like elapsed_s) is operational: not part of unit_key,
+    excluded from fingerprints — a unit that needed retries replays
+    interchangeably with one that succeeded first try."""
+    assert "attempts" in VOLATILE_FIELDS
+    key = unit_key("x", {"i": 0, "mode": "flaky", "passes_at": 2}, {})
+
+    # first-try success vs retried success: identical keys, identical
+    # fingerprints, different attempts on disk
+    s1 = ResultStore()
+    eng1 = ExperimentEngine(_fault_runner, store=s1,
+                            local_context={"marker_dir": str(tmp_path)},
+                            retries=2)
+    eng1.run(_units(1, mode="flaky", passes_at=2))
+    assert s1.get(key)["attempts"] == 2
+
+    s2 = ResultStore()
+    eng2 = ExperimentEngine(_fault_runner, store=s2,
+                            local_context={"marker_dir": str(tmp_path)},
+                            retries=2)
+    eng2.run(_units(1, mode="flaky", passes_at=2))   # marker: passes now
+    assert s2.get(key)["attempts"] == 1
+    assert s1.fingerprint() == s2.fingerprint()
+
+    # local_context (incl. the engine-injected unit_timeout_s) never
+    # feeds the hash: both engines derived the same key
+    assert eng1.key_for(_units(1, mode="flaky", passes_at=2)[0]) == key
+
+
+def test_broken_backend_surfaces_failures_not_exceptions():
+    """A backend whose submit itself raises (e.g. BrokenProcessPool
+    after a worker segfault) must yield per-unit structured failures,
+    never abort run() mid-sweep."""
+    from repro.exp import BaseExecutor
+
+    class _BrokenExecutor(BaseExecutor):
+        def submit(self, fn, /, *args, **kwargs):
+            raise RuntimeError("pool is broken")
+
+        def as_completed(self, futures=None):
+            return iter(())
+
+    eng = ExperimentEngine(_fault_runner, store=ResultStore(),
+                           executor=_BrokenExecutor(), retries=2)
+    out = eng.run(_units(3))
+    assert out == [None] * 3
+    assert eng.stats.failed == 3 and len(eng.stats.failures) == 3
+    assert all(f["error"] == "pool is broken" for f in eng.stats.failures)
+
+
+def test_failures_do_not_abort_sweep_and_stats_accumulate():
+    eng = _engine(retries=1)
+    eng.run(_units(3) + _units(2, mode="raise"))
+    assert eng.stats.computed == 3 and eng.stats.failed == 2
+    assert len(eng.stats.failures) == 2
+    eng.run(_units(3))                            # warm replay
+    assert eng.stats.cached == 3
+    lt = eng.lifetime
+    assert lt.computed == 3 and lt.failed == 2 and lt.cached == 3
+    assert lt.total == 8 and len(lt.failures) == 2

@@ -4,9 +4,9 @@ byte-identical aggregations and semantically identical stores."""
 import pytest
 
 from repro.exp import (
-    EXECUTORS, ExperimentEngine, ProcessExecutor, ResultStore,
-    SerialExecutor, ThreadExecutor, WorkUnit, make_engine, make_executor,
-    regret_curves)
+    EXECUTORS, ExperimentEngine, ProcessExecutor, RemoteExecutor,
+    ResultStore, SerialExecutor, ThreadExecutor, WorkUnit, make_engine,
+    make_executor, regret_curves)
 from repro.multicloud.dataset import build_dataset
 
 METHODS = ("random", "cd")
@@ -28,10 +28,11 @@ def workloads(ds):
 # registry + spec resolution
 # ---------------------------------------------------------------------------
 def test_registry_has_all_builtins():
-    assert set(EXECUTORS) == {"serial", "thread", "process"}
+    assert set(EXECUTORS) == {"serial", "thread", "process", "remote"}
     assert EXECUTORS["serial"] is SerialExecutor
     assert EXECUTORS["thread"] is ThreadExecutor
     assert EXECUTORS["process"] is ProcessExecutor
+    assert EXECUTORS["remote"] is RemoteExecutor
 
 
 def test_spec_none_keeps_historical_worker_split():

@@ -1,0 +1,400 @@
+"""Remote execution stack: the pickle-free wire protocol, the worker
+subcommand, transports (local subprocess + the SSH code path driven
+through ``sh -c``), and the RemoteExecutor controller — per-host
+capacity, exactly-once delivery, dead-worker reassignment, heartbeat
+loss detection, unit deadlines, and fault injection via
+``REPRO_EXP_FAULT``.  Everything here runs real worker subprocesses;
+the controller-only logic (parsing, encoding) is tested pure."""
+import math
+import os
+import sys
+import time
+
+import pytest
+
+from repro.exp import (
+    ExperimentEngine, RemoteExecutor, ResultStore, SSHTransport, UnitTimeout,
+    WorkUnit, WorkerDied, make_executor, parse_hosts)
+from repro.exp.executors import LocalSubprocessTransport
+from repro.exp.wire import (
+    RemoteTaskError, decode_task, encode_task, fn_ref, read_msg,
+    resolve_ref)
+from repro.exp.worker import FaultInjector
+
+
+# ---------------------------------------------------------------------------
+# module-level functions for workers to import (the wire protocol ships
+# references, not code)
+# ---------------------------------------------------------------------------
+def _double(x):
+    return 2 * x
+
+
+def _boom(x):
+    raise ValueError(f"boom {x}")
+
+
+def _sleep_long():
+    time.sleep(60)
+
+
+def _fsin(i):
+    # float-heavy payload: JSON must round-trip these bit-exactly
+    return {"v": math.sin(i) * 1e-7, "w": [math.sqrt(i + 1), i / 3.0]}
+
+
+def _crash_until_marker(marker):
+    """Hard-exit the worker unless the marker file exists (simulates a
+    machine that dies mid-task once, then a healthy reassignment)."""
+    if not os.path.exists(marker):
+        with open(marker, "w") as f:
+            f.write("crashed once")
+        os._exit(3)
+    return "survived"
+
+
+def _unit_runner(kind, params, context):
+    return _fsin(int(params["i"]))
+
+
+def _hang_runner(kind, params, context):
+    time.sleep(60)
+
+
+def _getpid():
+    return os.getpid()
+
+
+def _returns_non_json(x):
+    import numpy as np
+    return {"n": np.int64(x)}
+
+
+def _noisy(x):
+    """Pollute every output channel a task could: Python-level stdout,
+    raw fd 1, and a subprocess inheriting the worker's fds."""
+    import subprocess
+    print("python-level noise")
+    os.write(1, b"fd-level noise\n")
+    subprocess.run(["echo", "subprocess noise"], check=True)
+    return x + 1
+
+
+# ---------------------------------------------------------------------------
+# wire protocol (pure)
+# ---------------------------------------------------------------------------
+def test_fn_ref_roundtrip():
+    assert resolve_ref(fn_ref(_double)) is _double
+    assert resolve_ref(fn_ref(os.path.join)) is os.path.join
+    # builtins are module-bound (__self__ is the builtins module), not
+    # instance-bound: they must stay accepted
+    assert resolve_ref(fn_ref(abs)) is abs
+
+
+def test_fn_ref_rejects_unimportable():
+    with pytest.raises(TypeError, match="module-level"):
+        fn_ref(lambda x: x)
+
+    def local_fn():
+        pass
+
+    with pytest.raises(TypeError, match="module-level"):
+        fn_ref(local_fn)
+
+    class _Holder:
+        def method(self):
+            pass
+
+    # bound methods resolve to the unbound function remotely, shifting
+    # every argument — must be rejected at submit time
+    with pytest.raises(TypeError, match="module-level"):
+        fn_ref(_Holder().method)
+
+
+def test_task_encode_decode_roundtrip():
+    line = encode_task(7, _double, (3,), {"extra": [1.5, "s"]})
+    import json
+    msg = json.loads(line)
+    assert msg["type"] == "task" and msg["id"] == 7
+    fn, args, kwargs = decode_task(msg)
+    assert fn is _double and args == [3]
+    assert kwargs == {"extra": [1.5, "s"]}
+
+
+def test_task_encodes_callable_arguments():
+    # the engine ships its runner as an argument: must travel by ref
+    import json
+    msg = json.loads(encode_task(0, _double, (_boom, 1), {}))
+    fn, args, _ = decode_task(msg)
+    assert fn is _double and args[0] is _boom and args[1] == 1
+
+
+def test_submit_rejects_unserializable_arguments():
+    line_ok = encode_task(0, _double, (1,), {})
+    assert line_ok
+    with pytest.raises(TypeError):
+        encode_task(1, _double, (object(),), {})
+
+
+def test_read_msg_eof_and_corrupt_line():
+    import io
+    assert read_msg(io.StringIO("")) is None
+    assert read_msg(io.StringIO("not json\n")) is None
+    assert read_msg(io.StringIO('{"type": "heartbeat"}\n')) == {
+        "type": "heartbeat"}
+
+
+# ---------------------------------------------------------------------------
+# hosts spec + fault spec parsing (pure)
+# ---------------------------------------------------------------------------
+def test_parse_hosts_default_is_local_workers():
+    [(tr, cap)] = parse_hosts(None, workers=3)
+    assert isinstance(tr, LocalSubprocessTransport) and cap == 3
+
+
+def test_parse_hosts_grammar():
+    entries = parse_hosts("local*2, ssh:me@h1*4, ssh:h2")
+    assert isinstance(entries[0][0], LocalSubprocessTransport)
+    assert entries[0][1] == 2
+    assert isinstance(entries[1][0], SSHTransport)
+    assert entries[1][0].host == "me@h1" and entries[1][1] == 4
+    assert entries[2][0].host == "h2" and entries[2][1] == 1
+
+
+def test_parse_hosts_rejects_garbage():
+    with pytest.raises(ValueError, match="bad host spec"):
+        parse_hosts("slurm:partition")
+    with pytest.raises(ValueError, match="empty"):
+        parse_hosts(" , ")
+
+
+def test_fault_injector_parse():
+    inj = FaultInjector("timeout:0.25:12,crash:0.5")
+    assert inj.p_timeout == 0.25 and inj.sleep_s == 12.0
+    assert inj.p_crash == 0.5
+    assert FaultInjector("timeout:0.1").sleep_s == 3600.0
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultInjector("sigsegv:0.1")
+
+
+def test_fault_injector_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_EXP_FAULT", raising=False)
+    assert FaultInjector.from_env() is None
+    monkeypatch.setenv("REPRO_EXP_FAULT", "crash:0.125")
+    assert FaultInjector.from_env().p_crash == 0.125
+
+
+# ---------------------------------------------------------------------------
+# live workers: contract + fault tolerance
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def remote2():
+    """One warm two-worker executor shared by the contract tests (worker
+    spawn costs ~1s; the fault tests that kill workers build their
+    own)."""
+    ex = RemoteExecutor(workers=2)
+    yield ex
+    ex.shutdown()
+
+
+def test_remote_delivers_every_future_exactly_once(remote2):
+    futs = {remote2.submit(_double, i): i for i in range(8)}
+    futs.update({remote2.submit(_boom, i): -1 for i in range(2)})
+    seen = []
+    for fut in remote2.as_completed(list(futs)):
+        seen.append(fut)
+        if futs[fut] >= 0:
+            assert fut.result() == 2 * futs[fut]
+        else:
+            with pytest.raises(RemoteTaskError, match="ValueError: boom"):
+                fut.result()
+    assert len(seen) == len(set(seen)) == 10
+
+
+def test_remote_submit_fails_fast_on_bad_arguments(remote2):
+    with pytest.raises(TypeError):
+        remote2.submit(_double, object())
+    with pytest.raises(TypeError, match="module-level"):
+        remote2.submit(lambda: None)
+    # the executor stays usable after rejected submits
+    [fut] = list(remote2.as_completed([remote2.submit(_double, 21)]))
+    assert fut.result() == 42
+
+
+def test_remote_error_carries_remote_type(remote2):
+    [fut] = list(remote2.as_completed([remote2.submit(_boom, 9)]))
+    exc = fut.exception()
+    assert isinstance(exc, RemoteTaskError)
+    assert exc.remote_type == "ValueError"
+
+
+def test_non_json_return_value_is_an_error_not_a_coercion(remote2):
+    """A result that would only survive the wire stringified (np.int64
+    → \"42\") must fail loudly: silent coercion would make the remote
+    backend disagree with in-process ones."""
+    [fut] = list(remote2.as_completed([remote2.submit(_returns_non_json,
+                                                      42)]))
+    exc = fut.exception()
+    assert isinstance(exc, RemoteTaskError)
+    assert exc.remote_type == "TypeError"
+
+
+def test_hosts_spec_requires_remote_executor():
+    with pytest.raises(ValueError, match="only applies to the remote"):
+        make_executor("process", workers=2, hosts="ssh:gpu1*8")
+    with pytest.raises(ValueError, match="only applies to the remote"):
+        make_executor(None, workers=2, hosts="local*2")
+    assert make_executor("thread", workers=1, hosts=None) is not None
+
+
+@pytest.mark.slow
+def test_dead_worker_reassignment(tmp_path):
+    """A worker that hard-exits mid-task loses nothing: the task is
+    reassigned (fresh worker) and still delivered exactly once."""
+    marker = str(tmp_path / "crashed")
+    with RemoteExecutor(workers=1, max_reassign=2) as ex:
+        [fut] = list(ex.as_completed([ex.submit(_crash_until_marker,
+                                                marker)]))
+        assert fut.result() == "survived"
+    assert os.path.exists(marker)
+
+
+@pytest.mark.slow
+def test_reassignment_budget_exhaustion(monkeypatch):
+    """Every attempt crashes: the task must surface WorkerDied, not hang
+    or double-deliver."""
+    monkeypatch.setenv("REPRO_EXP_FAULT", "crash:1.0")
+    with RemoteExecutor(workers=1, max_reassign=1,
+                        max_worker_strikes=5) as ex:
+        [fut] = list(ex.as_completed([ex.submit(_double, 1)]))
+        with pytest.raises(WorkerDied):
+            fut.result()
+
+
+@pytest.mark.slow
+def test_unit_deadline_kills_wedged_worker_then_recovers():
+    """A task the worker cannot answer (stuck before/inside execution)
+    hits the controller deadline: UnitTimeout on the future, worker
+    killed and respawned, next task healthy."""
+    with RemoteExecutor(workers=1, unit_timeout_s=0.3,
+                        timeout_grace_s=0.3) as ex:
+        t0 = time.time()
+        [fut] = list(ex.as_completed([ex.submit(_sleep_long)]))
+        with pytest.raises(UnitTimeout):
+            fut.result()
+        assert time.time() - t0 < 30          # did not wait out the sleep
+        [fut2] = list(ex.as_completed([ex.submit(_double, 5)]))
+        assert fut2.result() == 10            # respawned slot works
+
+
+def test_heartbeat_silence_retires_dead_transport():
+    """A 'worker' that never speaks the protocol (here: plain sleep) is
+    detected by heartbeat loss, its task reassigned until every silent
+    spawn is retired, then failed loudly — and later submits fail fast
+    instead of queueing forever against zero capacity."""
+    silent = SSHTransport("exec sleep 60", ssh_cmd=("sh", "-c"),
+                          remote_command="")
+    with RemoteExecutor(hosts=[(silent, 1)], heartbeat_timeout_s=0.5,
+                        startup_grace_s=0.5, max_reassign=0,
+                        max_worker_strikes=0) as ex:
+        [fut] = list(ex.as_completed([ex.submit(_double, 1)]))
+        with pytest.raises(WorkerDied):
+            fut.result()
+        late = ex.submit(_double, 2)          # all transports retired
+        assert late.done()
+        with pytest.raises(WorkerDied, match="no live workers"):
+            late.result()
+
+
+def test_noisy_task_output_cannot_corrupt_protocol(remote2):
+    """stdout pollution at every level (print, raw fd 1, inherited-fd
+    subprocess) goes to the worker's stderr, never into the framing."""
+    futs = [remote2.submit(_noisy, i) for i in range(4)]
+    got = sorted(f.result() for f in remote2.as_completed(futs))
+    assert got == [1, 2, 3, 4]
+
+
+@pytest.mark.slow
+def test_in_task_timeout_retires_contaminated_worker():
+    """When the engine's in-task watchdog fires inside the worker, the
+    stuck runner thread is still alive there: the controller must
+    replace that worker, not reuse it."""
+    from repro.exp.engine import _invoke
+
+    with RemoteExecutor(workers=1) as ex:
+        [f0] = list(ex.as_completed([ex.submit(_getpid)]))
+        pid_before = f0.result()
+        [f1] = list(ex.as_completed(
+            [ex.submit(_invoke, _hang_runner, "x", {}, {}, 0.2, 0.0)]))
+        with pytest.raises(UnitTimeout):
+            f1.result()
+        [f2] = list(ex.as_completed([ex.submit(_getpid)]))
+        assert f2.result() != pid_before      # fresh worker process
+
+
+@pytest.mark.slow
+def test_shutdown_resolves_in_flight_futures():
+    """shutdown() with a task still running must resolve its future
+    (result if the worker finishes in the drain window, WorkerDied if it
+    had to be killed) — never leave waiters hanging forever."""
+    ex = RemoteExecutor(workers=1)
+    warm = ex.submit(_double, 1)
+    list(ex.as_completed([warm]))          # worker up + module imported
+    fut = ex.submit(_sleep_long)
+    time.sleep(0.5)                        # let the task reach the worker
+    ex.shutdown()
+    with pytest.raises(WorkerDied, match="shut down"):
+        fut.result(timeout=10)
+
+
+def test_ssh_transport_codepath_via_sh():
+    """Drive SSHTransport's exact spawn/framing path through ``sh -c``
+    instead of a real ssh client: same stdio channel, same worker."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    tests = os.path.dirname(__file__)
+    cmd = (f'PYTHONPATH="{src}:{tests}" exec "{sys.executable}" '
+           f'-m repro.exp worker --heartbeat 0.5')
+    tr = SSHTransport(cmd, ssh_cmd=("sh", "-c"), remote_command="")
+    with RemoteExecutor(hosts=[(tr, 2)]) as ex:
+        futs = [ex.submit(_double, i) for i in range(6)]
+        got = sorted(f.result() for f in ex.as_completed(futs))
+        assert got == [0, 2, 4, 6, 8, 10]
+
+
+# ---------------------------------------------------------------------------
+# engine through remote workers: bit-identical to in-process serial
+# ---------------------------------------------------------------------------
+def test_engine_remote_bitwise_equals_serial():
+    units = [WorkUnit.make("x", i=i) for i in range(12)]
+    s_serial, s_remote = ResultStore(), ResultStore()
+    eng = ExperimentEngine(_unit_runner, store=s_serial, executor="serial")
+    ref = eng.run(units)
+    with ExperimentEngine(_unit_runner, store=s_remote, executor="remote",
+                          workers=2) as eng_r:
+        out = eng_r.run(units)
+        assert eng_r.stats.computed == 12 and eng_r.stats.failed == 0
+    assert out == ref                          # exact float equality
+    assert s_remote.fingerprint() == s_serial.fingerprint()
+
+
+@pytest.mark.slow
+def test_engine_remote_fault_injection_still_bitwise(tmp_path,
+                                                     monkeypatch):
+    """The acceptance property, in miniature: injected crashes +
+    stalls, engine timeouts + retries — and the store is still
+    semantically identical to the fault-free serial run."""
+    monkeypatch.setenv("REPRO_EXP_FAULT", "timeout:0.15:3600,crash:0.15")
+    units = [WorkUnit.make("x", i=i) for i in range(10)]
+    s_serial = ResultStore()
+    ExperimentEngine(_unit_runner, store=s_serial,
+                     executor="serial").run(units)
+    s_faulty = ResultStore(str(tmp_path / "faulty.jsonl"))
+    with ExperimentEngine(_unit_runner, store=s_faulty, executor="remote",
+                          workers=2, unit_timeout_s=2.0, retries=8,
+                          executor_kwargs={"max_reassign": 8,
+                                           "timeout_grace_s": 0.5,
+                                           "max_worker_strikes": 10},
+                          ) as eng:
+        out = eng.run(units)
+    assert all(r is not None for r in out)
+    assert s_faulty.fingerprint() == s_serial.fingerprint()

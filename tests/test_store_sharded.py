@@ -196,6 +196,67 @@ def test_compact_spares_shards_grown_since_load(tmp_path):
     assert recovered.get(k)["result"] == {"v": i}
 
 
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_parallel_compact_matches_serial_byte_for_byte(tmp_path, executor):
+    """Per-prefix parallel compaction (through the executor registry)
+    must leave exactly the files, bytes, and fingerprint that the
+    serial path leaves."""
+    roots = [str(tmp_path / d) for d in ("serial", "parallel")]
+    for root in roots:
+        s = ShardedResultStore(root, writer_id="w1")
+        _fill(s, 120)
+        s2 = ShardedResultStore(root, writer_id="w2")
+        for i in range(100, 140):
+            k, rec = _rec(i)
+            s2.put(k, rec)
+    serial = ShardedResultStore(roots[0])
+    serial.compact()
+    parallel = ShardedResultStore(roots[1])
+    parallel.compact(executor=executor, workers=4)
+    rel = [sorted(os.path.relpath(p, r)
+                  for p in ShardedResultStore(r)._shard_files())
+           for r in roots]
+    assert rel[0] == rel[1] and len(rel[0]) > 10
+    for a, b in zip(*rel):
+        with open(os.path.join(roots[0], a)) as fa, \
+                open(os.path.join(roots[1], b)) as fb:
+            assert fa.read() == fb.read(), a
+    assert (ShardedResultStore(roots[0]).fingerprint()
+            == ShardedResultStore(roots[1]).fingerprint())
+
+
+def test_parallel_compact_preserves_safety_guards(tmp_path):
+    """The parallel path must inherit the serial path's no-data-loss
+    guarantees: unreadable shards and shards grown since load survive."""
+    root = str(tmp_path / "shards")
+    writer = ShardedResultStore(root, writer_id="host-b")
+    _fill(writer, 30)
+    maint = ShardedResultStore(root, writer_id="maint")
+    files = maint._shard_files()
+    victim = files[0]
+    with open(victim, "wb") as f:        # unreadable after load: spared
+        f.write(b"\xff\xfe\x00\x01" * 8)
+    grown = files[1]
+    with open(grown, "a") as f:          # concurrent append: spared
+        f.write("tail\n")
+    maint.load_errors.append(victim)
+    maint.compact(executor="thread", workers=4)
+    assert os.path.exists(victim) and os.path.exists(grown)
+
+
+def test_cli_parallel_compact(tmp_path):
+    root = str(tmp_path / "shards")
+    s = ShardedResultStore(root, writer_id="w1")
+    _fill(s, 40)
+    fp = s.fingerprint()
+    r = _cli("compact", root, "--workers", "4", "--executor", "thread")
+    assert r.returncode == 0, r.stderr
+    assert "compacted" in r.stdout
+    after = ShardedResultStore(root)
+    assert after.fingerprint() == fp
+    assert all(p.endswith("_compact.jsonl") for p in after._shard_files())
+
+
 def test_merge_unreadable_source_shard_warns_not_crashes(tmp_path):
     """An unreadable shard in a source must not abort the merge (even
     into a single-file destination): readable records merge, the CLI

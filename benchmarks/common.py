@@ -48,6 +48,16 @@ def figure_engine(dataset, workers: int = 1, store=None,
                        else unit_store(store_dir))
 
 
+def check_methods_registered(methods) -> None:
+    """Fail fast (with the registered-name list) if a figure's METHODS
+    tuple names a method the registry does not know.  The tuples keep
+    the paper figures' presentation order; the registry stays the
+    single source of truth for what exists and how it runs."""
+    from repro.core.registry import get_method
+    for m in methods:
+        get_method(m)
+
+
 def report_engine(name: str, engine) -> None:
     """One machine-checkable stderr line per figure run: CI parses it to
     assert e.g. that a resume run replayed everything (computed=0) and

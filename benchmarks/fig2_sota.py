@@ -10,11 +10,14 @@ process pool.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, figure_engine, report_engine, write_rows
+from benchmarks.common import (
+    check_methods_registered, emit, figure_engine, report_engine, write_rows)
 from repro.exp import predictive_regret, regret_curves
 from repro.multicloud import build_dataset
 
 NAME = "fig2_sota"
+#: explicit tuple = the paper figure's presentation order; every entry
+#: must exist in the method registry (validated at run time)
 METHODS = ("random", "cd", "cherrypick_x1", "cherrypick_x3",
            "bilal_x1", "bilal_x3")
 BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
@@ -22,7 +25,9 @@ BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
 
 def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
         executor: str = None, store_dir: str = None, hosts: str = None,
-        timeout: float = None, retries: int = 0):
+        timeout: float = None, retries: int = 0,
+        granularity: str = "run"):
+    check_methods_registered(METHODS)
     ds = build_dataset()
     engine = figure_engine(ds, workers=workers, store=store,
                            executor=executor, store_dir=store_dir,
@@ -32,7 +37,8 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
     with engine:
         for target in ("cost", "time"):
             curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
-                                   workloads, engine=engine)
+                                   workloads, engine=engine,
+                                   granularity=granularity)
             # per-unit compute time as recorded at first execution —
             # stable when a later run replays the store instead of
             # recomputing
@@ -54,10 +60,10 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
 
 def main(quick: bool = False, workers: int = 1, executor: str = None,
          store_dir: str = None, hosts: str = None, timeout: float = None,
-         retries: int = 0) -> None:
+         retries: int = 0, granularity: str = "run") -> None:
     emit(run(quick=quick, workers=workers, executor=executor,
              store_dir=store_dir, hosts=hosts, timeout=timeout,
-             retries=retries))
+             retries=retries, granularity=granularity))
 
 
 if __name__ == "__main__":

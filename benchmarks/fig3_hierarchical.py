@@ -7,11 +7,13 @@ are replayed from the store, not recomputed.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, figure_engine, report_engine, write_rows
+from benchmarks.common import (
+    check_methods_registered, emit, figure_engine, report_engine, write_rows)
 from repro.exp import regret_curves
 from repro.multicloud import build_dataset
 
 NAME = "fig3_hierarchical"
+#: paper presentation order; entries validated against the registry
 METHODS = ("smac", "hyperopt", "rb", "cb_cherrypick", "cb_rbfopt",
            "cherrypick_x1", "cherrypick_x3", "random")
 BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
@@ -19,7 +21,9 @@ BUDGETS = (11, 22, 33, 44, 55, 66, 77, 88)
 
 def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
         executor: str = None, store_dir: str = None, hosts: str = None,
-        timeout: float = None, retries: int = 0):
+        timeout: float = None, retries: int = 0,
+        granularity: str = "run"):
+    check_methods_registered(METHODS)
     ds = build_dataset()
     engine = figure_engine(ds, workers=workers, store=store,
                            executor=executor, store_dir=store_dir,
@@ -29,7 +33,8 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
     with engine:
         for target in ("cost", "time"):
             curves = regret_curves(ds, METHODS, BUDGETS, seeds, target,
-                                   workloads, engine=engine)
+                                   workloads, engine=engine,
+                                   granularity=granularity)
             # recorded per-unit compute time (replay-stable; see
             # fig2_sota)
             per_iter = engine.stats.unit_elapsed_s / (
@@ -45,10 +50,10 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
 
 def main(quick: bool = False, workers: int = 1, executor: str = None,
          store_dir: str = None, hosts: str = None, timeout: float = None,
-         retries: int = 0) -> None:
+         retries: int = 0, granularity: str = "run") -> None:
     emit(run(quick=quick, workers=workers, executor=executor,
              store_dir=store_dir, hosts=hosts, timeout=timeout,
-             retries=retries))
+             retries=retries, granularity=granularity))
 
 
 if __name__ == "__main__":

@@ -9,17 +9,21 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, figure_engine, report_engine, write_rows
+from benchmarks.common import (
+    check_methods_registered, emit, figure_engine, report_engine, write_rows)
 from repro.exp import savings_distribution
 from repro.multicloud import build_dataset
 
 NAME = "fig4_savings"
+#: paper presentation order; entries validated against the registry
 METHODS = ("smac", "cb_rbfopt", "random", "exhaustive")
 
 
 def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
         executor: str = None, store_dir: str = None, hosts: str = None,
-        timeout: float = None, retries: int = 0):
+        timeout: float = None, retries: int = 0,
+        granularity: str = "run"):
+    check_methods_registered(METHODS)
     ds = build_dataset()
     engine = figure_engine(ds, workers=workers, store=store,
                            executor=executor, store_dir=store_dir,
@@ -31,7 +35,8 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
             for m in METHODS:
                 s = savings_distribution(
                     ds, m, budget=33, n_production=64, seeds=seeds,
-                    target=target, workloads=workloads, engine=engine)
+                    target=target, workloads=workloads, engine=engine,
+                    granularity=granularity)
                 out.append([
                     f"fig4.{target}.{m}.median", "",
                     round(float(np.median(s)), 4)])
@@ -50,10 +55,10 @@ def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
 
 def main(quick: bool = False, workers: int = 1, executor: str = None,
          store_dir: str = None, hosts: str = None, timeout: float = None,
-         retries: int = 0) -> None:
+         retries: int = 0, granularity: str = "run") -> None:
     emit(run(quick=quick, workers=workers, executor=executor,
              store_dir=store_dir, hosts=hosts, timeout=timeout,
-             retries=retries))
+             retries=retries, granularity=granularity))
 
 
 if __name__ == "__main__":

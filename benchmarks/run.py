@@ -39,6 +39,13 @@ def main() -> None:
     ap.add_argument("--retries", type=int, default=0,
                     help="extra attempts per unit after a failure/timeout "
                          "before it is surfaced as a structured failure")
+    ap.add_argument("--granularity", default="run", choices=("run", "eval"),
+                    help="search work-unit granularity: one unit per whole "
+                         "run (default), or per objective evaluation — "
+                         "drivers run in-process and every yielded "
+                         "(provider, config) request is dispatched through "
+                         "the executor and memoized in the store, shared "
+                         "across methods/seeds/budgets")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
@@ -54,7 +61,7 @@ def main() -> None:
         kwargs = {"quick": args.quick}
         accepted = inspect.signature(mod.main).parameters
         for opt in ("workers", "executor", "store_dir", "hosts",
-                    "timeout", "retries"):
+                    "timeout", "retries", "granularity"):
             if opt in accepted:
                 kwargs[opt] = getattr(args, opt)
         try:

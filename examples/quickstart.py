@@ -9,9 +9,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.cloudbandit import CloudBandit, b1_for_budget
+from repro.core.drivers import CloudBanditDriver
+from repro.core.cloudbandit import b1_for_budget
 from repro.core.evaluate import run_search, savings_for_history
 from repro.core.optimizers import RBFOpt
+from repro.core.registry import method_names
 from repro.multicloud import build_dataset
 
 
@@ -21,12 +23,20 @@ def main() -> None:
     print(f"task: minimize cloud COST of {task.workload}")
     print(f"  88 configs across {ds.domain.provider_names}; "
           f"true min = ${task.true_min:.4f}/run, "
-          f"random-config expectation = ${task.mean_value():.4f}/run\n")
+          f"random-config expectation = ${task.mean_value():.4f}/run")
+    print(f"  registered search methods: {', '.join(method_names())}\n")
 
+    # CloudBandit as a suspendable driver: the search never calls the
+    # objective itself — it yields batches of (provider, config)
+    # requests (one per active arm, so a live backend could deploy all
+    # active arms' pulls concurrently) and we feed the results back
     B = 33
     b1 = b1_for_budget(B, K=3)
-    cb = CloudBandit(ds.domain, RBFOpt, b1=b1, seed=0)
-    res = cb.run(task.objective)
+    cb = CloudBanditDriver(ds.domain, RBFOpt, b1=b1, seed=0)
+    while not cb.done:
+        batch = cb.ask_batch()                       # ≤ K requests
+        cb.tell_batch([task.objective(p, c) for p, c in batch])
+    res = cb.result()
     print(f"CloudBandit (B={B}, b1={b1}, eta=2):")
     print(f"  eliminated: {res.eliminated}")
     print(f"  pulls per arm: {res.pulls}")

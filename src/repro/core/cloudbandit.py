@@ -9,6 +9,12 @@ exponentially more search.
 
 Total budget: B = Σ_{m=1..K} (K − m + 1) · b1 · η^(m−1)
 (K = 3, η = 2  ⇒  B = 11 · b1 — the paper's budget grid 11, 22, …, 88).
+
+This closed-loop :meth:`CloudBandit.run` is the retained reference
+implementation; the suspendable equivalent that yields each round's arm
+pulls as evaluation-request batches is
+:class:`repro.core.drivers.CloudBanditDriver` (bit-identical histories,
+enforced by ``tests/test_drivers.py``).
 """
 from __future__ import annotations
 

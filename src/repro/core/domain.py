@@ -98,25 +98,128 @@ class Encoder:
     Numeric params are min-max scaled; categoricals are one-hot.  Missing
     (inactive) params encode as all-zeros one-hot / -1 numeric — the SMAC
     convention for conditional parameters.
+
+    Per-space lookup state (min/max bounds, value→column tables, feature
+    offsets) is precomputed once at construction, so :meth:`encode` does
+    dict lookups instead of linear ``values.index`` scans and min/max
+    passes per call, and :meth:`encode_many` fills the feature matrix
+    with vectorized column assignments.  Both are bit-identical to the
+    retained scalar :meth:`encode_reference`
+    (``tests/test_domain.py``).
     """
     spaces: Tuple[ParamSpace, ...]
     hierarchical_names: bool = False
 
+    def __post_init__(self) -> None:
+        # frozen dataclass: stash derived lookup tables via
+        # object.__setattr__; they are pure functions of `spaces`, so
+        # eq/hash (field-based) stay consistent
+        specs = []
+        offset = 0
+        for s in self.spaces:
+            if s.numeric:
+                lo, hi = min(s.values), max(s.values)
+                specs.append((s.name, True, offset, lo, hi, None))
+                offset += 1
+            else:
+                index: Optional[Dict[Any, int]] = {}
+                try:
+                    for i, v in enumerate(s.values):
+                        index.setdefault(v, i)  # first match, like .index
+                except TypeError:               # unhashable values: fall
+                    index = None                # back to the linear scan
+                specs.append((s.name, False, offset, None, None, index))
+                offset += len(s.values)
+        object.__setattr__(self, "_specs", tuple(specs))
+        object.__setattr__(self, "_dim", offset)
+
     @property
     def dim(self) -> int:
-        return sum(1 if s.numeric else len(s.values) for s in self.spaces)
+        return self._dim
 
-    def encode(self, point_or_config) -> np.ndarray:
+    def _as_config(self, point_or_config) -> dict:
+        """Normalize an input (point tuple or config dict) to the flat
+        name→value dict the per-space lookups read from."""
         if isinstance(point_or_config, tuple):
             provider, config = point_or_config
             cfg = dict(config)
             cfg["provider"] = provider
             if self.hierarchical_names:
-                prov = self_provider = provider
+                for k, v in config.items():
+                    cfg[k] = v                  # shared names stay as-is
+                    cfg[f"{provider}.{k}"] = v  # provider-local prefixed
+        else:
+            cfg = dict(point_or_config)
+        return cfg
+
+    def _lookup(self, index: Optional[Dict[Any, int]], space: ParamSpace,
+                val) -> Optional[int]:
+        if index is not None:
+            try:
+                return index.get(val)
+            except TypeError:
+                pass        # unhashable query value: scan like reference
+        return space.values.index(val) if val in space.values else None
+
+    def encode(self, point_or_config) -> np.ndarray:
+        cfg = self._as_config(point_or_config)
+        out = np.zeros(self._dim, dtype=np.float64)
+        for (name, numeric, off, lo, hi, index), s in zip(self._specs,
+                                                          self.spaces):
+            val = cfg.get(name, None)
+            if numeric:
+                if val is None:
+                    out[off] = -1.0
+                elif hi > lo:
+                    out[off] = (float(val) - lo) / (hi - lo)
+                # else: degenerate single-value space stays 0.0
+            elif val is not None:
+                i = self._lookup(index, s, val)
+                if i is not None:
+                    out[off + i] = 1.0
+        return out
+
+    def encode_many(self, items: Sequence) -> np.ndarray:
+        """Vectorized batch encode: one column assignment per space
+        instead of one row vector per item."""
+        cfgs = [self._as_config(it) for it in items]
+        out = np.zeros((len(cfgs), self._dim), dtype=np.float64)
+        for (name, numeric, off, lo, hi, index), s in zip(self._specs,
+                                                          self.spaces):
+            vals = [cfg.get(name, None) for cfg in cfgs]
+            if numeric:
+                missing = np.fromiter((v is None for v in vals), dtype=bool,
+                                      count=len(vals))
+                if hi > lo:
+                    raw = np.fromiter(
+                        (0.0 if v is None else float(v) for v in vals),
+                        dtype=np.float64, count=len(vals))
+                    out[:, off] = (raw - lo) / (hi - lo)
+                out[missing, off] = -1.0
+            else:
+                rows, cols = [], []
+                for r, val in enumerate(vals):
+                    if val is None:
+                        continue
+                    i = self._lookup(index, s, val)
+                    if i is not None:
+                        rows.append(r)
+                        cols.append(off + i)
+                out[rows, cols] = 1.0
+        return out
+
+    def encode_reference(self, point_or_config) -> np.ndarray:
+        """Pre-optimization scalar implementation (linear value scans,
+        per-call min/max), retained as the bit-identity ground truth."""
+        if isinstance(point_or_config, tuple):
+            provider, config = point_or_config
+            cfg = dict(config)
+            cfg["provider"] = provider
+            if self.hierarchical_names:
                 prefixed = {}
                 for k, v in config.items():
                     prefixed[k] = v                       # shared names stay
-                    prefixed[f"{prov}.{k}"] = v           # provider-local
+                    prefixed[f"{provider}.{k}"] = v       # provider-local
                 cfg.update(prefixed)
         else:
             cfg = dict(point_or_config)
@@ -136,6 +239,3 @@ class Encoder:
                     onehot[s.values.index(val)] = 1.0
                 feats.extend(onehot)
         return np.asarray(feats, dtype=np.float64)
-
-    def encode_many(self, items: Sequence) -> np.ndarray:
-        return np.stack([self.encode(i) for i in items])

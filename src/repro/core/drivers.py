@@ -1,0 +1,477 @@
+"""Suspendable search drivers: every method as an ask/tell state machine.
+
+In the paper each objective evaluation is a real cloud deployment — the
+dominant expense — so the search loop must not own the objective call.
+Every method here is inverted into a :class:`SearchDriver`: a
+deterministic state machine that *yields* batches of ``(provider,
+config)`` evaluation requests (:meth:`~SearchDriver.ask_batch`) and
+consumes their results (:meth:`~SearchDriver.tell_batch`), instead of
+calling ``objective(...)`` inline.  The engine layer can then dispatch
+requests through any executor backend, memoize identical evaluations
+across methods/seeds/budgets, and batch independent requests into real
+wall-clock wins on live objectives.
+
+Batch shapes mirror each method's intrinsic parallelism:
+
+* flat methods (RS, CD, exhaustive, CherryPick x1, Bilal x1, SMAC, TPE)
+  are inherently sequential — batch size 1;
+* the "x3" adaptations run K independent per-provider streams — one
+  request per stream with remaining budget;
+* CloudBandit pulls every active arm of a round concurrently — one
+  request per active arm, ``b_m`` rounds deep;
+* Rising Bandits sweeps the active arms — one request per active arm
+  per sweep.
+
+Bit-identity contract: tells are replayed into the component optimizers
+in the exact order of the retained reference loops
+(``repro.core.evaluate.run_search_reference``,
+:meth:`repro.core.cloudbandit.CloudBandit.run`,
+:meth:`repro.core.rising_bandits.RisingBandits.run`), and each driver's
+``history`` reproduces the reference ``History`` — points and values —
+bit for bit.  The bit-identity suite (``tests/test_drivers.py``)
+enforces this for every registered method.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cloudbandit import CloudBanditResult, b1_for_budget
+from repro.core.domain import Domain
+from repro.core.optimizers import (
+    BO, RBFOpt, RandomSearch, SMACLike, TPE, bilal, cherrypick,
+    CoordinateDescent, ExhaustiveSearch)
+from repro.core.optimizers.base import BlackBoxOptimizer, History
+from repro.core.registry import register_method
+
+#: one evaluation request: (provider name, config dict)
+EvalRequest = Tuple[str, dict]
+
+
+class SearchDriver:
+    """Suspendable search: alternate :meth:`ask_batch` / :meth:`tell_batch`
+    until :attr:`done`.
+
+    The driver never calls the objective; the caller evaluates each
+    yielded ``(provider, config)`` request however it likes (inline,
+    through an executor pool, against a memoizing store) and replies
+    with one value per request, in request order.
+    """
+
+    @property
+    def done(self) -> bool:
+        raise NotImplementedError
+
+    @property
+    def history(self) -> History:
+        """Evaluation log in the reference loop's exact order (only
+        complete once :attr:`done`)."""
+        raise NotImplementedError
+
+    def ask_batch(self) -> List[EvalRequest]:
+        """Next batch of evaluation requests.  Only valid when not
+        :attr:`done` and with no batch outstanding."""
+        raise NotImplementedError
+
+    def tell_batch(self, values: Sequence[float]) -> None:
+        """Report results for the outstanding batch, in request order."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    def _begin_ask(self) -> None:
+        """Protocol guard (raises, never asserts — must hold under -O):
+        strict ask/tell alternation, no asks past completion."""
+        if getattr(self, "_pending", None) is not None:
+            raise RuntimeError("ask_batch with a batch already outstanding")
+        if self.done:
+            raise RuntimeError("ask_batch on a completed driver")
+
+    def _check_done(self) -> None:
+        if not self.done:
+            raise RuntimeError("result() before the driver is done")
+
+    def _take_pending(self, values: Sequence[float]) -> list:
+        pending = getattr(self, "_pending", None)
+        if pending is None:
+            raise RuntimeError("tell_batch without a pending ask_batch")
+        if len(values) != len(pending):
+            raise ValueError(
+                f"expected {len(pending)} values, got {len(values)}")
+        self._pending = None
+        return pending
+
+
+def drive(driver: SearchDriver,
+          objective: Callable[[str, dict], float]) -> History:
+    """Run a driver to completion against an inline objective — the
+    closed-loop behaviour the drivers replaced, as a 4-line adapter."""
+    while not driver.done:
+        batch = driver.ask_batch()
+        driver.tell_batch([objective(p, c) for p, c in batch])
+    return driver.history
+
+
+# ---------------------------------------------------------------------------
+# Flat methods: one optimizer over the flattened domain, batch size 1
+# ---------------------------------------------------------------------------
+class FlatDriver(SearchDriver):
+    """Wraps a :class:`BlackBoxOptimizer` whose candidates are full
+    ``(provider, config)`` points; sequential by nature (ask t+1 depends
+    on tell t), so batches are singletons."""
+
+    def __init__(self, opt: BlackBoxOptimizer, budget: int):
+        self.opt = opt
+        self.budget = int(budget)
+        self._pending: Optional[list] = None
+
+    @property
+    def done(self) -> bool:
+        return self._pending is None and len(self.opt.history) >= self.budget
+
+    @property
+    def history(self) -> History:
+        return self.opt.history
+
+    def ask_batch(self) -> List[EvalRequest]:
+        self._begin_ask()
+        idx = self.opt.ask()
+        self._pending = [idx]
+        return [self.opt.candidates[idx]]
+
+    def tell_batch(self, values: Sequence[float]) -> None:
+        (idx,) = self._take_pending(values)
+        self.opt.tell(idx, float(values[0]))
+
+
+# ---------------------------------------------------------------------------
+# "x3" adaptation: K independent per-provider streams, budget split equally
+# ---------------------------------------------------------------------------
+class IndependentDriver(SearchDriver):
+    """One component optimizer per provider, each a sequential stream;
+    streams are mutually independent, so every round yields one request
+    per stream with remaining budget.  The history concatenates the
+    per-stream logs in provider order — exactly the reference loop,
+    which ran the streams one after another."""
+
+    def __init__(self, factory: Callable[..., BlackBoxOptimizer],
+                 domain: Domain, budget: int, seed: int,
+                 attr: bool = False):
+        from repro.multicloud.providers import attr_encode_config
+        rng = np.random.default_rng(seed)
+        provs = domain.provider_names
+        share = budget // len(provs)
+        extra = budget - share * len(provs)
+        #: per stream: [provider, optimizer, remaining budget, History]
+        self._streams: List[list] = []
+        for i, prov in enumerate(provs):
+            b = share + (1 if i < extra else 0)
+            cands = domain.inner_candidates(prov)
+            if attr:
+                enc = lambda c, _p=prov: attr_encode_config(_p, c)  # noqa: E731
+            else:
+                enc = domain.inner_encoder(prov).encode
+            opt = factory(cands, enc, seed=int(rng.integers(2 ** 31)))
+            self._streams.append([prov, opt, b, History()])
+        self._pending: Optional[list] = None
+
+    @property
+    def done(self) -> bool:
+        return self._pending is None and all(s[2] <= 0 for s in self._streams)
+
+    @property
+    def history(self) -> History:
+        h = History()
+        for _prov, _opt, _b, sh in self._streams:
+            h.points.extend(sh.points)
+            h.values.extend(sh.values)
+        return h
+
+    def ask_batch(self) -> List[EvalRequest]:
+        self._begin_ask()
+        self._pending = []
+        out: List[EvalRequest] = []
+        for stream in self._streams:
+            prov, opt, b, _sh = stream
+            if b <= 0:
+                continue
+            idx = opt.ask()
+            self._pending.append((stream, idx))
+            out.append((prov, opt.candidates[idx]))
+        return out
+
+    def tell_batch(self, values: Sequence[float]) -> None:
+        pending = self._take_pending(values)
+        for (stream, idx), val in zip(pending, values):
+            prov, opt, _b, sh = stream
+            opt.tell(idx, val)
+            sh.append((prov, opt.candidates[idx]), val)
+            stream[2] -= 1
+
+
+# ---------------------------------------------------------------------------
+# CloudBandit (Algorithm 1): all active arms' pulls of a round, concurrently
+# ---------------------------------------------------------------------------
+class CloudBanditDriver(SearchDriver):
+    """Successive-halving over provider arms.  Within a round every
+    active arm takes ``b_m`` sequential pulls, but the arms are mutually
+    independent — so pull ``j`` of the round yields one request per
+    active arm.  The round's history is flushed in arm order (matching
+    the reference loop, which ran arms one after another), then the
+    worst arm is eliminated and the per-arm budget doubles."""
+
+    def __init__(self, domain: Domain, bbo_factory: Callable[..., Any], *,
+                 b1: int = 1, eta: float = 2.0, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.arms = list(domain.provider_names)
+        self.K = len(self.arms)
+        self.eta = eta
+        self.opts: Dict[str, BlackBoxOptimizer] = {}
+        for k in self.arms:                 # seed draws in arm order
+            self.opts[k] = bbo_factory(
+                domain.inner_candidates(k), domain.inner_encoder(k).encode,
+                seed=int(rng.integers(2 ** 31)))
+        self.active = list(self.arms)
+        self._history = History()
+        self.eliminated: List[Tuple[str, int]] = []
+        self.pulls = {k: 0 for k in self.arms}
+        self.best: Dict[str, Tuple[Any, float]] = {}
+        self._m = 1                         # current round (1..K)
+        self._b_m = int(b1)
+        self._j = 0                         # pulls completed this round
+        self._round_buf: Dict[str, list] = {}
+        self._pending: Optional[list] = None
+
+    @property
+    def done(self) -> bool:
+        return self._pending is None and self._m > self.K
+
+    @property
+    def history(self) -> History:
+        return self._history
+
+    def ask_batch(self) -> List[EvalRequest]:
+        self._begin_ask()
+        self._pending = []
+        out: List[EvalRequest] = []
+        for k in self.active:
+            o = self.opts[k]
+            idx = o.ask()
+            self._pending.append((k, idx))
+            out.append((k, o.candidates[idx]))
+        return out
+
+    def tell_batch(self, values: Sequence[float]) -> None:
+        pending = self._take_pending(values)
+        for (k, idx), v in zip(pending, values):
+            val = float(v)
+            o = self.opts[k]
+            cfg = o.candidates[idx]
+            o.tell(idx, val)
+            self._round_buf.setdefault(k, []).append(((k, cfg), val))
+            self.pulls[k] += 1
+        self._j += 1
+        if self._j >= self._b_m:
+            self._finish_round()
+
+    def _finish_round(self) -> None:
+        # flush the round's evaluations arm-by-arm: the reference loop
+        # ran arm k's b_m pulls to completion before touching arm k+1
+        for k in self.active:
+            for point, val in self._round_buf.get(k, ()):
+                self._history.append(point, val)
+            self.best[k] = self.opts[k].best()
+        self._round_buf = {}
+        if len(self.active) > 1:
+            worst = max(self.active, key=lambda k: self.best[k][1])
+            self.active.remove(worst)
+            self.eliminated.append((worst, self._m))
+        self._b_m = int(round(self.eta * self._b_m))
+        self._m += 1
+        self._j = 0
+
+    def result(self) -> CloudBanditResult:
+        self._check_done()
+        k_star = min(self.active, key=lambda k: self.best[k][1])
+        cfg_star, loss_star = self.best[k_star]
+        return CloudBanditResult(
+            provider=k_star, config=cfg_star, loss=loss_star,
+            history=self._history, eliminated=self.eliminated,
+            pulls=self.pulls)
+
+
+# ---------------------------------------------------------------------------
+# Rising Bandits: one request per active arm per sweep
+# ---------------------------------------------------------------------------
+class RisingBanditsDriver(SearchDriver):
+    """Round-robin sweeps over the active arms with extrapolated-bound
+    elimination after each sweep; a sweep's pulls are independent across
+    arms, so each sweep is one batch (truncated at the budget)."""
+
+    def __init__(self, domain: Domain, budget: int, *, seed: int = 0,
+                 warmup: int = 3, slope_window: int = 3):
+        rng = np.random.default_rng(seed)
+        self.budget = int(budget)
+        self.warmup = warmup
+        self.slope_window = slope_window
+        self.arms = list(domain.provider_names)
+        self.opts: Dict[str, BO] = {
+            k: BO(domain.inner_candidates(k),
+                  domain.inner_encoder(k).encode,
+                  seed=int(rng.integers(2 ** 31)),
+                  surrogate="gp", acq="gp_hedge")
+            for k in self.arms
+        }
+        self.curves: Dict[str, List[float]] = {k: [] for k in self.arms}
+        self.active = list(self.arms)
+        self._history = History()
+        self.used = 0
+        self._pending: Optional[list] = None
+
+    @property
+    def done(self) -> bool:
+        return self._pending is None and self.used >= self.budget
+
+    @property
+    def history(self) -> History:
+        return self._history
+
+    def ask_batch(self) -> List[EvalRequest]:
+        self._begin_ask()
+        # the reference sweep breaks out as soon as the budget is hit,
+        # so a final partial sweep only covers the first few active arms
+        sweep = list(self.active)[:self.budget - self.used]
+        self._pending = []
+        out: List[EvalRequest] = []
+        for k in sweep:
+            o = self.opts[k]
+            idx = o.ask()
+            self._pending.append((k, idx))
+            out.append((k, o.candidates[idx]))
+        return out
+
+    def tell_batch(self, values: Sequence[float]) -> None:
+        pending = self._take_pending(values)
+        for (k, idx), v in zip(pending, values):
+            val = float(v)
+            o = self.opts[k]
+            cfg = o.candidates[idx]
+            o.tell(idx, val)
+            self._history.append((k, cfg), val)
+            self.used += 1
+            self.curves[k].append(min(val, self.curves[k][-1])
+                                  if self.curves[k] else val)
+        self._eliminate()
+
+    def _eliminate(self) -> None:
+        # verbatim from the reference loop: extrapolated confidence
+        # bounds after every sweep once all active arms warmed up
+        if len(self.active) > 1 and all(
+                len(self.curves[k]) >= self.warmup for k in self.active):
+            remaining = self.budget - self.used
+            lower: Dict[str, float] = {}
+            current: Dict[str, float] = {}
+            for k in self.active:
+                c = self.curves[k]
+                w = min(self.slope_window, len(c) - 1)
+                slope = (c[-1] - c[-1 - w]) / max(w, 1)  # ≤ 0
+                lower[k] = c[-1] + slope * max(
+                    remaining // max(len(self.active), 1), 1)
+                current[k] = c[-1]
+            best_current = min(current.values())
+            for k in list(self.active):
+                if len(self.active) > 1 and lower[k] > best_current:
+                    self.active.remove(k)
+
+    def result(self) -> Tuple[str, dict, float, History]:
+        self._check_done()
+        best_k = min(self.arms, key=lambda k: self.opts[k].best()[1]
+                     if len(self.opts[k].history) else np.inf)
+        cfg, loss = self.opts[best_k].best()
+        return best_k, cfg, loss, self._history
+
+
+# ---------------------------------------------------------------------------
+# Built-in method registrations (registration order = the paper's
+# SEARCH_METHODS order; repro.core.evaluate derives its tuple from this)
+# ---------------------------------------------------------------------------
+def _flat(opt_cls, domain: Domain, budget: int, seed: int,
+          encode=None, **kw) -> FlatDriver:
+    cands = domain.all_candidates()
+    encode = encode or domain.flat_encoder().encode
+    return FlatDriver(opt_cls(cands, encode, seed=seed, **kw), budget)
+
+
+@register_method("random", tags=("search", "baseline", "flat"))
+def _make_random(domain, budget, seed, target):
+    return _flat(RandomSearch, domain, budget, seed)
+
+
+@register_method("cd", tags=("search", "baseline", "flat"))
+def _make_cd(domain, budget, seed, target):
+    return _flat(CoordinateDescent, domain, budget, seed)
+
+
+@register_method("exhaustive", tags=("search", "baseline", "flat"))
+def _make_exhaustive(domain, budget, seed, target):
+    return _flat(ExhaustiveSearch, domain, min(budget, domain.size()), seed)
+
+
+@register_method("cherrypick_x1", tags=("search", "sota", "flat"))
+def _make_cherrypick_x1(domain, budget, seed, target):
+    from repro.multicloud.providers import attr_encode_point
+    return _flat(BO, domain, budget, seed, encode=attr_encode_point,
+                 surrogate="gp", acq="ei")
+
+
+@register_method("cherrypick_x3", tags=("search", "sota", "independent"))
+def _make_cherrypick_x3(domain, budget, seed, target):
+    return IndependentDriver(cherrypick, domain, budget, seed, attr=True)
+
+
+@register_method("bilal_x1", tags=("search", "sota", "flat"))
+def _make_bilal_x1(domain, budget, seed, target):
+    from repro.multicloud.providers import attr_encode_point
+    kw = dict(surrogate="gp", acq="lcb") if target == "cost" else \
+        dict(surrogate="rf", acq="pi")
+    return _flat(BO, domain, budget, seed, encode=attr_encode_point, **kw)
+
+
+@register_method("bilal_x3", tags=("search", "sota", "independent"))
+def _make_bilal_x3(domain, budget, seed, target):
+    return IndependentDriver(
+        lambda c, e, seed=0: bilal(c, e, seed, target=target),
+        domain, budget, seed, attr=True)
+
+
+@register_method("smac", tags=("search", "hierarchical", "flat"))
+def _make_smac(domain, budget, seed, target):
+    return _flat(SMACLike, domain, budget, seed)
+
+
+@register_method("hyperopt", tags=("search", "hierarchical", "flat"))
+def _make_hyperopt(domain, budget, seed, target):
+    cands = domain.all_candidates()
+    enc = domain.flat_encoder()
+    return FlatDriver(TPE(cands, enc.encode, seed=seed, domain=domain),
+                      budget)
+
+
+@register_method("rb", budget_coupled=True,
+                 tags=("search", "hierarchical", "bandit"))
+def _make_rb(domain, budget, seed, target):
+    return RisingBanditsDriver(domain, budget, seed=seed)
+
+
+@register_method("cb_cherrypick", budget_coupled=True,
+                 tags=("search", "hierarchical", "bandit"))
+def _make_cb_cherrypick(domain, budget, seed, target):
+    b1 = b1_for_budget(budget, len(domain.provider_names))
+    return CloudBanditDriver(domain, cherrypick, b1=b1, seed=seed)
+
+
+@register_method("cb_rbfopt", budget_coupled=True,
+                 tags=("search", "hierarchical", "bandit"))
+def _make_cb_rbfopt(domain, budget, seed, target):
+    b1 = b1_for_budget(budget, len(domain.provider_names))
+    return CloudBanditDriver(domain, RBFOpt, b1=b1, seed=seed)

@@ -16,19 +16,20 @@ import numpy as np
 
 from repro.core.cloudbandit import CloudBandit, b1_for_budget
 from repro.core.domain import Domain
+from repro.core.drivers import drive
 from repro.core.optimizers import (
     BO, RBFOpt, RandomSearch, SMACLike, TPE, cherrypick, bilal,
     CoordinateDescent, ExhaustiveSearch)
 from repro.core.optimizers.base import History
 from repro.core.predictive import LinearPredictor, RFPredictor
+from repro.core.registry import get_method, method_names
 from repro.core.rising_bandits import RisingBandits
 from repro.multicloud.dataset import OfflineDataset, Task
 
-SEARCH_METHODS = (
-    "random", "cd", "exhaustive",
-    "cherrypick_x1", "cherrypick_x3", "bilal_x1", "bilal_x3",
-    "smac", "hyperopt", "rb", "cb_cherrypick", "cb_rbfopt",
-)
+#: every registered search method, in registration (paper) order — the
+#: single source of truth is the method registry; this module attribute
+#: is kept for the many callers/tests that import it
+SEARCH_METHODS = method_names(tag="search")
 PREDICTIVE_METHODS = ("linear", "rf_paris")
 
 
@@ -38,6 +39,7 @@ def _point_objective(task: Task):
 
 def _run_flat(opt_cls, task: Task, domain: Domain, budget: int, seed: int,
               encode=None, **kw) -> History:
+    """Reference inline loop for flat methods (see run_search_reference)."""
     cands = domain.all_candidates()
     encode = encode or domain.flat_encoder().encode
     opt = opt_cls(cands, encode, seed=seed, **kw)
@@ -46,7 +48,8 @@ def _run_flat(opt_cls, task: Task, domain: Domain, budget: int, seed: int,
 
 def _run_independent(factory, task: Task, domain: Domain, budget: int,
                      seed: int, attr: bool = False) -> History:
-    """'x3' adaptation: K independent optimizers, budget split equally."""
+    """'x3' adaptation: K independent optimizers, budget split equally
+    (reference inline loop; see run_search_reference)."""
     from repro.multicloud.providers import attr_encode_config
     rng = np.random.default_rng(seed)
     hist = History()
@@ -71,6 +74,24 @@ def _run_independent(factory, task: Task, domain: Domain, budget: int,
 
 def run_search(method: str, task: Task, domain: Domain, budget: int,
                seed: int) -> History:
+    """Run one search method to completion against a task objective.
+
+    Dispatch goes through the method registry: the registered driver
+    factory builds a suspendable :class:`~repro.core.drivers.SearchDriver`
+    for this cell and :func:`~repro.core.drivers.drive` closes the loop
+    inline — bit-identical to :func:`run_search_reference`, the retained
+    legacy inline-loop implementation.
+    """
+    spec = get_method(method)
+    driver = spec.make_driver(domain, budget, seed, target=task.target)
+    return drive(driver, task.objective)
+
+
+def run_search_reference(method: str, task: Task, domain: Domain,
+                         budget: int, seed: int) -> History:
+    """The pre-driver closed-loop implementation (inline objective
+    calls, if/elif dispatch), retained verbatim as the ground truth for
+    the driver bit-identity suite (``tests/test_drivers.py``)."""
     target = task.target
     if method == "random":
         return _run_flat(RandomSearch, task, domain, budget, seed)
@@ -143,12 +164,13 @@ def regret_curves(dataset: OfflineDataset, methods: Sequence[str],
                   budgets: Sequence[int], seeds: Sequence[int],
                   target: str, workloads: Optional[Sequence[str]] = None,
                   *, workers: int = 1, store=None,
-                  store_path: Optional[str] = None, engine=None
-                  ) -> Dict[str, List[float]]:
+                  store_path: Optional[str] = None, engine=None,
+                  granularity: str = "run") -> Dict[str, List[float]]:
     from repro.exp import protocols
     return protocols.regret_curves(
         dataset, methods, budgets, seeds, target, workloads,
-        workers=workers, store=store, store_path=store_path, engine=engine)
+        workers=workers, store=store, store_path=store_path, engine=engine,
+        granularity=granularity)
 
 
 def predictive_regret(dataset: OfflineDataset, methods: Sequence[str],
@@ -166,13 +188,23 @@ def predictive_regret(dataset: OfflineDataset, methods: Sequence[str],
 # ---------------------------------------------------------------------------
 # Savings analysis (Fig. 4)
 # ---------------------------------------------------------------------------
-def savings_for_history(task: Task, hist: History, n_production: int
-                        ) -> float:
-    c_opt = float(np.sum(hist.values))          # one-time search expense
-    r_opt = float(np.min(hist.values))          # optimized per-run expense
+def savings_from_values(task: Task, values: Sequence[float],
+                        n_production: int) -> float:
+    """The Sec. IV-E savings expression — the one place it is written.
+
+    ``values`` is a search's raw evaluation trace (``History.values`` or
+    an engine unit's stored ``result["values"]``).
+    """
+    c_opt = float(np.sum(values))               # one-time search expense
+    r_opt = float(np.min(values))               # optimized per-run expense
     r_rand = task.mean_value()                  # expected random expense
     n = n_production
     return (n * r_rand - (c_opt + n * r_opt)) / (n * r_rand)
+
+
+def savings_for_history(task: Task, hist: History, n_production: int
+                        ) -> float:
+    return savings_from_values(task, hist.values, n_production)
 
 
 def savings_distribution(dataset: OfflineDataset, method: str, *,
@@ -181,10 +213,11 @@ def savings_distribution(dataset: OfflineDataset, method: str, *,
                          workloads: Optional[Sequence[str]] = None,
                          workers: int = 1, store=None,
                          store_path: Optional[str] = None,
-                         engine=None) -> np.ndarray:
+                         engine=None, granularity: str = "run") -> np.ndarray:
     """Per-workload savings (averaged over seeds) — the Fig. 4 box plots."""
     from repro.exp import protocols
     return protocols.savings_distribution(
         dataset, method, budget=budget, n_production=n_production,
         seeds=seeds, target=target, workloads=workloads,
-        workers=workers, store=store, store_path=store_path, engine=engine)
+        workers=workers, store=store, store_path=store_path, engine=engine,
+        granularity=granularity)

@@ -7,6 +7,12 @@ extrapolates the recent improvement slope to bound what an arm could still
 reach, and eliminates an arm when even its optimistic bound cannot beat
 another arm's pessimistic bound.  The paper notes (and our experiments
 confirm) that this assumption does not translate perfectly to multi-cloud.
+
+This closed-loop :meth:`RisingBandits.run` is the retained reference
+implementation; the suspendable equivalent that yields evaluation
+requests instead of calling the objective is
+:class:`repro.core.drivers.RisingBanditsDriver` (bit-identical histories,
+enforced by ``tests/test_drivers.py``).
 """
 from __future__ import annotations
 
@@ -67,7 +73,7 @@ class RisingBandits:
                     w = min(self.slope_window, len(c) - 1)
                     slope = (c[-1] - c[-1 - w]) / max(w, 1)  # ≤ 0
                     # optimistic achievable loss if the recent improvement
-                    # rate持续 for every remaining pull on this arm
+                    # rate continues for every remaining pull on this arm
                     lower[k] = c[-1] + slope * max(
                         remaining // max(len(active), 1), 1)
                     current[k] = c[-1]

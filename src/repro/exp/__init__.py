@@ -5,8 +5,9 @@ from repro.exp.executors import (
     RemoteExecutor, SerialExecutor, SSHTransport, ThreadExecutor,
     WorkerTransport, make_executor, parse_hosts)
 from repro.exp.protocols import (
-    BUDGET_COUPLED, make_engine, predictive_regret, regret_curves,
-    savings_distribution)
+    BUDGET_COUPLED, GRANULARITIES, make_engine, predictive_regret,
+    regret_curves, savings_distribution)
+from repro.exp.runners import drive_units, eval_unit
 from repro.exp.store import (
     BaseResultStore, ResultStore, ShardedResultStore, merge_stores,
     open_store, unit_key)
@@ -14,11 +15,12 @@ from repro.exp.wire import RemoteTaskError, UnitTimeout, WorkerDied
 
 __all__ = [
     "BUDGET_COUPLED", "BaseExecutor", "BaseResultStore", "EXECUTORS",
-    "EngineStats", "ExperimentEngine", "LocalSubprocessTransport",
-    "ProcessExecutor", "RemoteExecutor", "RemoteTaskError", "ResultStore",
-    "SSHTransport", "SerialExecutor", "ShardedResultStore",
-    "ThreadExecutor", "UnitTimeout", "WorkUnit", "WorkerDied",
-    "WorkerTransport", "make_engine", "make_executor", "merge_stores",
-    "open_store", "parse_hosts", "predictive_regret", "regret_curves",
+    "EngineStats", "ExperimentEngine", "GRANULARITIES",
+    "LocalSubprocessTransport", "ProcessExecutor", "RemoteExecutor",
+    "RemoteTaskError", "ResultStore", "SSHTransport", "SerialExecutor",
+    "ShardedResultStore", "ThreadExecutor", "UnitTimeout", "WorkUnit",
+    "WorkerDied", "WorkerTransport", "drive_units", "eval_unit",
+    "make_engine", "make_executor", "merge_stores", "open_store",
+    "parse_hosts", "predictive_regret", "regret_curves",
     "savings_distribution", "unit_key",
 ]

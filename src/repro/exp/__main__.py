@@ -28,6 +28,10 @@ sharded directory — detected from the path):
     Record counts by unit kind plus the store's content fingerprint
     (timing-independent: equal fingerprints ⇒ semantically identical
     stores, regardless of layout or write order).
+``methods [--tag TAG]``
+    List the registered search methods (name, budget-coupling, tags)
+    from the method registry — the same metadata ``run_search``, the
+    figure protocols, and the benchmarks introspect.
 """
 from __future__ import annotations
 
@@ -119,6 +123,20 @@ def _cmd_stat(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_methods(args: argparse.Namespace) -> int:
+    from repro.core.registry import method_specs
+    specs = [s for s in method_specs()
+             if args.tag is None or args.tag in s.tags]
+    if not specs:
+        print(f"no methods tagged {args.tag!r}", file=sys.stderr)
+        return 1
+    width = max(len(s.name) for s in specs)
+    for s in specs:
+        coupling = "budget-coupled" if s.budget_coupled else "curve-sliced"
+        print(f"{s.name:<{width}}  {coupling:<14}  {','.join(s.tags)}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.exp",
@@ -151,6 +169,11 @@ def main(argv=None) -> int:
     p.add_argument("store")
     p.set_defaults(fn=_cmd_stat)
 
+    p = sub.add_parser("methods", help="list registered search methods")
+    p.add_argument("--tag", default=None,
+                   help="filter by registry tag (e.g. flat, bandit, sota)")
+    p.set_defaults(fn=_cmd_methods)
+
     p = sub.add_parser("worker", help="remote execution worker "
                                       "(framed JSONL over stdio)")
     p.add_argument("--heartbeat", type=float, default=2.0,
@@ -158,7 +181,13 @@ def main(argv=None) -> int:
     p.set_defaults(fn=_cmd_worker)
 
     args = ap.parse_args(argv)
-    return args.fn(args)
+    try:
+        return args.fn(args)
+    except BrokenPipeError:
+        # stdout piped into a pager/head that closed early — the unix
+        # convention is silent success, not a traceback
+        sys.stderr.close()
+        return 0
 
 
 if __name__ == "__main__":

@@ -1,28 +1,46 @@
 """Figure protocols decomposed into engine work units + thin aggregation.
 
-Each protocol (Figs. 2-4) expands into independent
-``(method, workload, target, seed, budget)`` units, runs them through an
-:class:`~repro.exp.engine.ExperimentEngine`, and aggregates the returned
-evaluation traces exactly as the legacy serial loops in
+Each protocol (Figs. 2-4) expands into independent cells, runs them
+through an :class:`~repro.exp.engine.ExperimentEngine`, and aggregates
+the returned evaluation traces exactly as the legacy serial loops in
 ``repro.core.evaluate`` did — same nesting order, same float reduction
 order — so engine output is bit-identical to the historical path for
 fixed seeds, at any worker count.
+
+Two execution granularities (``granularity=``) produce bit-identical
+aggregates:
+
+``"run"``
+    One work unit per (method, workload, target, seed, budget) cell;
+    the unit runs the whole search inline in a worker (the historical
+    behaviour).
+``"eval"``
+    The method's suspendable driver executes in this process and every
+    batch of ``(provider, config)`` requests it yields is dispatched as
+    ``eval`` work units through the engine (see
+    :func:`repro.exp.runners.drive_units`): single evaluations are
+    memoized in the store and shared across methods, seeds, and the
+    budget grid — on the offline dataset a warm store replays the whole
+    fig2 grid with ``computed=0``, and on live objectives batched arm
+    pulls fan out through the executor concurrently.
+
+Method metadata (which methods exist, which are budget-coupled) comes
+from the method registry (:mod:`repro.core.registry`) — the former
+``BUDGET_COUPLED`` frozenset literal here is now a live view of it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.registry import BUDGET_COUPLED, get_method
 from repro.exp.engine import ExperimentEngine, WorkUnit
 from repro.exp.executors import ExecutorSpec
-from repro.exp.runners import search_runner
+from repro.exp.runners import drive_units, search_runner
 from repro.exp.store import BaseResultStore, ResultStore, open_store
 
-#: methods whose evaluation trajectory depends on the *total* budget
-#: (successive-halving style schedules): one unit per (seed, budget);
-#: everything else runs once at max budget and is read off the curve
-BUDGET_COUPLED = frozenset({"rb", "cb_cherrypick", "cb_rbfopt"})
+GRANULARITIES = ("run", "eval")
 
 
 def make_engine(dataset, *, workers: int = 1,
@@ -59,6 +77,33 @@ def _search_unit(method: str, workload: str, target: str, seed: int,
                          target=target, seed=int(seed), budget=int(budget))
 
 
+def _run_cells(engine: ExperimentEngine, dataset,
+               cells: Sequence[Tuple[str, str, str, int, int]],
+               granularity: str) -> List[List[float]]:
+    """Execute search cells ``(method, workload, target, seed, budget)``
+    at the requested granularity; returns each cell's raw evaluation
+    trace, aligned with ``cells``."""
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"granularity must be one of {GRANULARITIES}, "
+                         f"got {granularity!r}")
+    if granularity == "run":
+        units = [_search_unit(m, w, t, s, b) for m, w, t, s, b in cells]
+        results = engine.run(units)
+        out = []
+        for (m, w, _t, _s, _b), res in zip(cells, results):
+            if res is None:
+                raise RuntimeError(
+                    f"unit failed for {m}/{w}: "
+                    + "; ".join(engine.stats.errors[:3]))
+            out.append(res["values"])
+        return out
+    driver_cells = [
+        (get_method(m).make_driver(dataset.domain, b, s, target=t), w, t)
+        for m, w, t, s, b in cells
+    ]
+    return [h.values for h in drive_units(engine, driver_cells)]
+
+
 # ---------------------------------------------------------------------------
 # Figs. 2-3: mean regret over seeds × workloads per budget
 # ---------------------------------------------------------------------------
@@ -69,35 +114,30 @@ def regret_curves(dataset, methods: Sequence[str], budgets: Sequence[int],
                   workers: int = 1, store: Optional[BaseResultStore] = None,
                   store_path: Optional[str] = None,
                   store_dir: Optional[str] = None,
-                  executor: ExecutorSpec = None
-                  ) -> Dict[str, List[float]]:
+                  executor: ExecutorSpec = None,
+                  granularity: str = "run") -> Dict[str, List[float]]:
     workloads = list(workloads or dataset.workloads)
     engine = engine or make_engine(dataset, workers=workers, store=store,
                                    store_path=store_path,
                                    store_dir=store_dir, executor=executor)
     max_b = max(budgets)
-    units: List[WorkUnit] = []
-    slots: List[tuple] = []            # (method, workload, fixed_budget|None)
+    cells: List[tuple] = []        # (method, workload, target, seed, budget)
+    slots: List[tuple] = []        # (method, workload, fixed_budget|None)
     for method in methods:
         for w in workloads:
             for seed in seeds:
                 if method in BUDGET_COUPLED:
                     for b in budgets:
-                        units.append(_search_unit(method, w, target, seed, b))
+                        cells.append((method, w, target, seed, int(b)))
                         slots.append((method, w, int(b)))
                 else:
-                    units.append(_search_unit(method, w, target, seed, max_b))
+                    cells.append((method, w, target, seed, max_b))
                     slots.append((method, w, None))
-    results = engine.run(units)
+    traces = _run_cells(engine, dataset, cells, granularity)
 
     per_budget = {(m, int(b)): [] for m in methods for b in budgets}
-    for (method, w, b), res in zip(slots, results):
-        if res is None:
-            raise RuntimeError(
-                f"unit failed for {method}/{w}: "
-                + "; ".join(engine.stats.errors[:3]))
+    for (method, w, b), values in zip(slots, traces):
         task = dataset.task(w, target)
-        values = res["values"]
         if b is not None:
             per_budget[(method, b)].append(task.regret(min(values)))
         else:
@@ -158,32 +198,26 @@ def savings_distribution(dataset, method: str, *, budget: int = 33,
                          store: Optional[BaseResultStore] = None,
                          store_path: Optional[str] = None,
                          store_dir: Optional[str] = None,
-                         executor: ExecutorSpec = None) -> np.ndarray:
+                         executor: ExecutorSpec = None,
+                         granularity: str = "run") -> np.ndarray:
+    # lazy: keeps `import repro.exp` light for workers/CLI processes
+    from repro.core.evaluate import savings_from_values
     workloads = list(workloads or dataset.workloads)
     engine = engine or make_engine(dataset, workers=workers, store=store,
                                    store_path=store_path,
                                    store_dir=store_dir, executor=executor)
     b = dataset.domain.size() if method == "exhaustive" else budget
-    units = [
-        _search_unit(method, w, target, seed, b)
-        for w in workloads for seed in seeds
-    ]
-    results = engine.run(units)
+    cells = [(method, w, target, seed, int(b))
+             for w in workloads for seed in seeds]
+    traces = _run_cells(engine, dataset, cells, granularity)
     out = []
     i = 0
     for w in workloads:
         task = dataset.task(w, target)
-        r_rand = task.mean_value()
         vals = []
         for _s in seeds:
-            res = results[i]
+            # the Sec. IV-E formula lives in repro.core.evaluate
+            vals.append(savings_from_values(task, traces[i], n_production))
             i += 1
-            if res is None:
-                raise RuntimeError(f"savings unit failed for {method}/{w}")
-            values = res["values"]
-            c_opt = float(np.sum(values))
-            r_opt = float(np.min(values))
-            n = n_production
-            vals.append((n * r_rand - (c_opt + n * r_opt)) / (n * r_rand))
         out.append(float(np.mean(vals)))
     return np.asarray(out)

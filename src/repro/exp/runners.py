@@ -3,6 +3,21 @@
 Every runner has the signature ``(kind, params, context) -> dict`` with
 JSON-serializable inputs/outputs, and derives all randomness from the
 unit's own seed — the engine's determinism guarantee rests on that.
+
+Two granularities of search work unit share :func:`search_runner`:
+
+``search``
+    One whole (method, workload, target, seed, budget) run — the unit
+    the protocols historically fanned out.
+``eval``
+    One objective evaluation ``(workload, target, provider, config)``.
+    Emitted by :func:`drive_units`, the driver-runner that executes
+    suspendable search drivers in-process and dispatches every batch of
+    evaluation requests they yield through the engine — so identical
+    evaluations are memoized across methods, seeds, and the budget
+    grid, and a batch's requests fan out through whatever executor
+    backend the engine is wired with.  Note the unit's content key has
+    no method/seed/budget in it: that is what makes the cache shared.
 """
 from __future__ import annotations
 
@@ -10,7 +25,9 @@ import json
 import os
 import subprocess
 import sys
-from typing import Any, Dict
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.exp.engine import EngineStats, ExperimentEngine, WorkUnit
 
 
 # ---------------------------------------------------------------------------
@@ -40,7 +57,82 @@ def search_runner(kind: str, params: Dict[str, Any],
                 "value": float(out["value"]),
                 "provider": out["provider"],
                 "online_evals": int(out["online_evals"])}
+    if kind == "eval":
+        # one objective evaluation; params["config"] is the canonical
+        # sorted (name, value) pair list (tuples in-process, lists after
+        # a JSON round-trip — dict() accepts both)
+        val = task.objective(params["provider"], dict(params["config"]))
+        return {"value": float(val)}
     raise ValueError(f"unknown unit kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Driver-runner: evaluation-granular execution of suspendable searches
+# ---------------------------------------------------------------------------
+def eval_unit(workload: str, target: str, provider: str,
+              config: dict) -> WorkUnit:
+    """Content-keyed unit for one objective evaluation.  The key is
+    volatile-safe: it hashes only (workload, target, provider, canonical
+    config) plus the engine context (dataset seed) — never the method,
+    seed, or budget that happened to request it — so every search that
+    touches the same point shares one stored record."""
+    return WorkUnit.make("eval", workload=workload, target=target,
+                         provider=provider,
+                         config=tuple(sorted(config.items())))
+
+
+def drive_units(engine: ExperimentEngine,
+                cells: Sequence[Tuple[Any, str, str]]) -> List[Any]:
+    """Run suspendable search drivers to completion at evaluation
+    granularity.
+
+    ``cells`` is a sequence of ``(driver, workload, target)``.  Each
+    iteration gathers one ``ask_batch`` from every unfinished driver,
+    submits the union as ``eval`` units through the engine — which
+    dedups identical requests within the round, replays already-stored
+    evaluations, and fans the rest out through its executor backend —
+    then tells each driver its results in request order.  Driver state
+    machines are deterministic, so histories are bit-identical to the
+    inline closed loop regardless of executor, worker count, or store
+    warmth.
+
+    Returns one :class:`~repro.core.optimizers.base.History` per cell.
+    On return ``engine.stats`` holds the totals accumulated over all
+    rounds of this call (``engine.lifetime`` accumulates as usual).
+    """
+    cells = list(cells)
+    agg = EngineStats()
+    pending: Dict[int, list] = {}
+    active = [i for i, (drv, _w, _t) in enumerate(cells) if not drv.done]
+    while active:
+        units: List[WorkUnit] = []
+        for i in active:
+            drv, w, t = cells[i]
+            batch = drv.ask_batch()
+            pending[i] = batch
+            units.extend(eval_unit(w, t, prov, cfg) for prov, cfg in batch)
+        results = engine.run(units)
+        agg.absorb(engine.stats)
+        pos = 0
+        still_active = []
+        for i in active:
+            drv, w, t = cells[i]
+            batch = pending.pop(i)
+            values = []
+            for prov, _cfg in batch:
+                res = results[pos]
+                pos += 1
+                if res is None:
+                    raise RuntimeError(
+                        f"eval unit failed for {w}/{t}/{prov}: "
+                        + "; ".join(engine.stats.errors[:3]))
+                values.append(res["value"])
+            drv.tell_batch(values)
+            if not drv.done:
+                still_active.append(i)
+        active = still_active
+    engine.stats = agg
+    return [drv.history for drv, _w, _t in cells]
 
 
 def subprocess_timeout(context: Dict[str, Any],

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.domain import Domain, Encoder, ParamSpace, ProviderSpace
 from repro.multicloud.providers import multicloud_domain
 
 
@@ -40,6 +40,113 @@ def test_inner_encoder_roundtrip_distinct(domain):
         cands = domain.inner_candidates(prov)
         X = enc.encode_many(cands)
         assert len({tuple(r) for r in map(tuple, X)}) == len(cands)
+
+
+# ---------------------------------------------------------------------------
+# Encoder fast path (precomputed value→index tables, vectorized
+# encode_many) vs the retained scalar reference — bit identical
+# ---------------------------------------------------------------------------
+def test_encode_bit_identical_to_reference(domain):
+    encoders = [domain.flat_encoder()] + [
+        domain.inner_encoder(p) for p in domain.provider_names]
+    inputs = [domain.all_candidates()] + [
+        domain.inner_candidates(p) for p in domain.provider_names]
+    for enc, items in zip(encoders, inputs):
+        for it in items:
+            a, b = enc.encode(it), enc.encode_reference(it)
+            assert a.dtype == b.dtype and np.array_equal(a, b)
+
+
+def test_encode_missing_and_unknown_values():
+    enc = Encoder((ParamSpace("n", (2, 4, 8)),
+                   ParamSpace("kind", ("a", "b"))))
+    cases = [{}, {"n": 4}, {"kind": "b"}, {"n": 2, "kind": "zz"},
+             {"n": None, "kind": None}]
+    for cfg in cases:
+        assert np.array_equal(enc.encode(cfg), enc.encode_reference(cfg))
+    # missing numeric → -1, unknown categorical → all-zero one-hot
+    assert enc.encode({})[0] == -1.0
+    assert not enc.encode({"n": 2, "kind": "zz"})[1:].any()
+
+
+def test_encode_degenerate_single_value_space():
+    enc = Encoder((ParamSpace("c", (7,)),))
+    for cfg in ({}, {"c": 7}):
+        assert np.array_equal(enc.encode(cfg), enc.encode_reference(cfg))
+    assert enc.encode({"c": 7})[0] == 0.0      # hi == lo → 0, not NaN
+
+
+def test_encode_duplicate_values_keep_first_index():
+    # list.index semantics: the reference one-hots the FIRST occurrence
+    enc = Encoder((ParamSpace("d", ("x", "y", "x")),))
+    assert np.array_equal(enc.encode({"d": "x"}),
+                          enc.encode_reference({"d": "x"}))
+    assert list(enc.encode({"d": "x"})) == [1.0, 0.0, 0.0]
+
+
+def test_encode_unhashable_values_fall_back_to_scan():
+    enc = Encoder((ParamSpace("u", (["a"], ["b"])),))
+    assert np.array_equal(enc.encode({"u": ["b"]}),
+                          enc.encode_reference({"u": ["b"]}))
+
+
+def test_encode_unhashable_query_against_hashable_space():
+    # the mirror case: hashable space values, unhashable LOOKUP value —
+    # must match the reference's all-zero one-hot, not raise
+    enc = Encoder((ParamSpace("kind", ("a", "b")),))
+    q = {"kind": ["a"]}
+    assert np.array_equal(enc.encode(q), enc.encode_reference(q))
+    assert not enc.encode(q).any()
+    assert np.array_equal(enc.encode_many([q, {"kind": "b"}]),
+                          np.stack([enc.encode_reference(q),
+                                    enc.encode_reference({"kind": "b"})]))
+
+
+def test_encode_many_matches_per_item(domain):
+    for enc, items in (
+            (domain.flat_encoder(), domain.all_candidates()),
+            (domain.inner_encoder("gcp"), domain.inner_candidates("gcp"))):
+        X = enc.encode_many(items)
+        R = np.stack([enc.encode_reference(i) for i in items])
+        assert X.dtype == R.dtype and np.array_equal(X, R)
+
+
+def test_encode_many_empty():
+    enc = multicloud_domain().flat_encoder()
+    assert enc.encode_many([]).shape == (0, enc.dim)
+
+
+def test_encoder_dim_cached_consistent(domain):
+    enc = domain.flat_encoder()
+    assert enc.dim == sum(1 if s.numeric else len(s.values)
+                          for s in enc.spaces)
+    assert enc.encode(domain.all_candidates()[0]).shape == (enc.dim,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_random_domain_encoders_bit_identical(data):
+    """Property: on randomly generated domains, fast encode ==
+    reference encode for every candidate, flat and inner."""
+    n_prov = data.draw(st.integers(1, 3))
+    providers = []
+    for i in range(n_prov):
+        params = tuple(
+            ParamSpace(f"p{i}_{j}",
+                       tuple(range(data.draw(st.integers(1, 3)) + 1)))
+            for j in range(data.draw(st.integers(1, 2))))
+        providers.append(ProviderSpace(f"prov{i}", params))
+    d = Domain(tuple(providers), (ParamSpace("nodes", (2, 3)),))
+    flat = d.flat_encoder()
+    pts = d.all_candidates()
+    assert np.array_equal(flat.encode_many(pts),
+                          np.stack([flat.encode_reference(p) for p in pts]))
+    for p in d.provider_names:
+        enc = d.inner_encoder(p)
+        cands = d.inner_candidates(p)
+        assert np.array_equal(
+            enc.encode_many(cands),
+            np.stack([enc.encode_reference(c) for c in cands]))
 
 
 @settings(max_examples=25, deadline=None)

@@ -1,0 +1,262 @@
+"""Suspendable drivers + method registry + evaluation-granular engine.
+
+The contract under test: for every registered search method, the
+suspendable driver replays tells in the exact order of the retained
+reference inline loop, producing a bit-identical ``History`` (points
+AND values) — directly, through the public ``run_search``, and at
+evaluation granularity through the engine (serial and threaded
+executors, cold and warm stores).
+"""
+import numpy as np
+import pytest
+
+from repro.core.cloudbandit import CloudBandit, b1_for_budget
+from repro.core.drivers import (
+    CloudBanditDriver, RisingBanditsDriver, drive)
+from repro.core.evaluate import (
+    SEARCH_METHODS, run_search, run_search_reference)
+from repro.core.optimizers import RBFOpt
+from repro.core.registry import (
+    BUDGET_COUPLED, get_method, is_budget_coupled, method_names,
+    register_method)
+from repro.core.rising_bandits import RisingBandits
+from repro.exp import make_engine, regret_curves, savings_distribution
+from repro.exp.runners import drive_units, eval_unit
+from repro.multicloud import build_dataset
+
+BUDGET = 11
+SEED = 3
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+@pytest.fixture(scope="module")
+def task(ds):
+    return ds.task(ds.workloads[0], "cost")
+
+
+@pytest.fixture(scope="module")
+def reference(ds, task):
+    """One reference History per method (shared across the suite)."""
+    return {m: run_search_reference(m, task, ds.domain, BUDGET, SEED)
+            for m in SEARCH_METHODS}
+
+
+def assert_history_equal(a, b):
+    assert a.points == b.points
+    assert a.values == b.values
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_order_is_paper_order():
+    assert method_names(tag="search") == SEARCH_METHODS == (
+        "random", "cd", "exhaustive",
+        "cherrypick_x1", "cherrypick_x3", "bilal_x1", "bilal_x3",
+        "smac", "hyperopt", "rb", "cb_cherrypick", "cb_rbfopt",
+    )
+
+
+def test_budget_coupled_view():
+    assert set(BUDGET_COUPLED) == {"rb", "cb_cherrypick", "cb_rbfopt"}
+    assert len(BUDGET_COUPLED) == 3
+    assert "rb" in BUDGET_COUPLED
+    assert "random" not in BUDGET_COUPLED
+    assert "nonexistent" not in BUDGET_COUPLED
+    assert is_budget_coupled("cb_rbfopt") and not is_budget_coupled("smac")
+
+
+def test_registry_unknown_method():
+    with pytest.raises(KeyError, match="unknown search method"):
+        get_method("levenberg")
+
+
+def test_registry_rejects_duplicate_registration():
+    with pytest.raises(ValueError, match="already registered"):
+        register_method("random", lambda **kw: None)
+
+
+def test_registry_external_registration_before_builtin_access():
+    """An extension registering its own method before anything touches
+    the builtins must not hide them (the builtin load is gated on a
+    flag, not on the registry being non-empty).  Needs a fresh
+    interpreter: in this process the builtins are long since loaded."""
+    import subprocess
+    import sys
+    code = (
+        "from repro.core import registry\n"
+        "registry.register_method('mine', lambda **kw: None,"
+        " tags=('search',))\n"
+        "names = registry.method_names()\n"
+        "assert 'mine' in names and 'random' in names, names\n"
+        "assert registry.get_method('cb_rbfopt').budget_coupled\n"
+    )
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True)
+    assert r.returncode == 0, r.stderr
+
+
+def test_registry_tag_filter():
+    flat = method_names(tag="flat")
+    assert "random" in flat and "cb_rbfopt" not in flat
+    assert method_names(tag="bandit") == ("rb", "cb_cherrypick", "cb_rbfopt")
+
+
+# ---------------------------------------------------------------------------
+# driver == reference inline loop, inline drive()
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", SEARCH_METHODS)
+def test_driver_bit_identical_to_reference(method, ds, task, reference):
+    spec = get_method(method)
+    driver = spec.make_driver(ds.domain, BUDGET, SEED, target=task.target)
+    hist = drive(driver, task.objective)
+    assert_history_equal(hist, reference[method])
+    # public API goes through the same path
+    assert_history_equal(run_search(method, task, ds.domain, BUDGET, SEED),
+                         reference[method])
+
+
+@pytest.mark.parametrize("method", ("cherrypick_x3", "rb", "cb_rbfopt"))
+def test_driver_batches_expose_parallelism(method, ds, task):
+    """Bandit/independent drivers must actually batch: at least one
+    ask_batch carries one request per active arm/stream, not size 1."""
+    driver = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                            target=task.target)
+    widths = []
+    while not driver.done:
+        batch = driver.ask_batch()
+        widths.append(len(batch))
+        driver.tell_batch([task.objective(p, c) for p, c in batch])
+    assert max(widths) == len(ds.domain.provider_names)
+
+
+def test_cloudbandit_driver_result_matches_class(ds, task):
+    b1 = b1_for_budget(33, len(ds.domain.provider_names))
+    legacy = CloudBandit(ds.domain, RBFOpt, b1=b1, seed=SEED).run(
+        task.objective)
+    driver = CloudBanditDriver(ds.domain, RBFOpt, b1=b1, seed=SEED)
+    drive(driver, task.objective)
+    res = driver.result()
+    assert res.provider == legacy.provider
+    assert res.config == legacy.config
+    assert res.loss == legacy.loss
+    assert res.eliminated == legacy.eliminated
+    assert res.pulls == legacy.pulls
+    assert_history_equal(res.history, legacy.history)
+
+
+def test_rising_bandits_driver_result_matches_class(ds, task):
+    best_k, cfg, loss, hist = RisingBandits(ds.domain, seed=SEED).run(
+        task.objective, 22)
+    driver = RisingBanditsDriver(ds.domain, 22, seed=SEED)
+    drive(driver, task.objective)
+    dk, dcfg, dloss, dhist = driver.result()
+    assert (dk, dcfg, dloss) == (best_k, cfg, loss)
+    assert_history_equal(dhist, hist)
+
+
+def test_tell_batch_protocol_violations(ds, task):
+    driver = get_method("random").make_driver(ds.domain, 5, 0)
+    with pytest.raises(RuntimeError, match="without a pending"):
+        driver.tell_batch([1.0])
+    batch = driver.ask_batch()
+    with pytest.raises(ValueError, match="expected 1 values"):
+        driver.tell_batch([1.0, 2.0])
+    driver.tell_batch([task.objective(*batch[0])])
+
+
+# ---------------------------------------------------------------------------
+# evaluation granularity through the engine: every method, serial and
+# threaded executors, cold and warm stores
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ("serial", "thread"))
+@pytest.mark.parametrize("method", SEARCH_METHODS)
+def test_eval_granularity_bit_identical(method, executor, ds, task,
+                                        reference, tmp_path):
+    w = ds.workloads[0]
+    store_path = str(tmp_path / "units.jsonl")
+
+    cold = make_engine(ds, store_path=store_path, executor=executor,
+                       workers=2)
+    driver = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                            target=task.target)
+    (hist,) = drive_units(cold, [(driver, w, task.target)])
+    assert_history_equal(hist, reference[method])
+    assert cold.lifetime.computed > 0
+
+    # warm: a fresh engine over the same store replays every evaluation
+    warm = make_engine(ds, store_path=store_path, executor=executor,
+                       workers=2)
+    driver2 = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                             target=task.target)
+    (hist2,) = drive_units(warm, [(driver2, w, task.target)])
+    assert_history_equal(hist2, reference[method])
+    assert warm.lifetime.computed == 0
+    assert warm.lifetime.cached > 0
+
+
+def test_eval_units_shared_across_methods_and_seeds(ds, task):
+    """The whole point of eval granularity: identical evaluations are
+    memoized once, across methods, seeds, and budgets — never more
+    computed units than the 88-point grid."""
+    engine = make_engine(ds)
+    w = ds.workloads[0]
+    cells = [
+        (get_method(m).make_driver(ds.domain, b, s, target="cost"), w,
+         "cost")
+        for m in ("random", "smac", "rb") for s in (0, 1) for b in (11, 22)
+    ]
+    drive_units(engine, cells)
+    assert engine.lifetime.computed <= ds.domain.size()
+    assert engine.lifetime.total > engine.lifetime.computed
+
+
+def test_eval_unit_key_is_method_and_seed_free(ds):
+    u = eval_unit("w", "cost", "aws", {"nodes": 2, "family": "m4"})
+    assert u.kind == "eval"
+    assert dict(u.params) == {
+        "workload": "w", "target": "cost", "provider": "aws",
+        "config": (("family", "m4"), ("nodes", 2))}
+    # canonical regardless of dict insertion order
+    u2 = eval_unit("w", "cost", "aws", {"family": "m4", "nodes": 2})
+    assert u == u2
+
+
+def test_eval_failure_surfaces_with_context(ds):
+    engine = make_engine(ds)
+    driver = get_method("random").make_driver(ds.domain, 5, 0)
+    with pytest.raises(RuntimeError, match="eval unit failed"):
+        drive_units(engine, [(driver, "no-such-workload", "cost")])
+
+
+# ---------------------------------------------------------------------------
+# protocol-level equivalence: run vs eval granularity
+# ---------------------------------------------------------------------------
+def test_regret_curves_granularities_agree(ds):
+    w = ds.workloads[:2]
+    methods = ("random", "cb_rbfopt")
+    run_g = regret_curves(ds, methods, (11, 22), (0, 1), "cost", w,
+                          granularity="run")
+    eval_g = regret_curves(ds, methods, (11, 22), (0, 1), "cost", w,
+                           granularity="eval")
+    assert run_g == eval_g         # exact float equality
+
+
+def test_savings_granularities_agree(ds):
+    w = ds.workloads[:2]
+    s_run = savings_distribution(ds, "smac", budget=11, seeds=(0,),
+                                 target="cost", workloads=w)
+    s_eval = savings_distribution(ds, "smac", budget=11, seeds=(0,),
+                                  target="cost", workloads=w,
+                                  granularity="eval")
+    assert np.array_equal(s_run, s_eval)
+
+
+def test_bad_granularity_rejected(ds):
+    with pytest.raises(ValueError, match="granularity"):
+        regret_curves(ds, ("random",), (11,), (0,), "cost",
+                      ds.workloads[:1], granularity="epoch")

@@ -8,27 +8,55 @@ train step under a candidate config; objective = three-term roofline step
 time.  Uses an 8-device CPU mesh + reduced model so it completes in a couple
 of minutes; the production path is ``python -m repro.tuner.autotune``.
 
+This example doubles as the custom-objective recipe: the reduced cell is
+not a registry arch, so it registers its own objective
+(``register_objective``) and runs it through the same driver/engine stack
+as the builtins — every compile lands as a memoized work unit.
+
     PYTHONPATH=src python examples/autotune_mesh.py
 """
 import dataclasses      # noqa: E402
+import functools        # noqa: E402
 
 from repro.configs import REGISTRY, get_shape   # noqa: E402
+from repro.core.objectives import bind_objective, register_objective  # noqa: E402
 from repro.launch.mesh import make_mesh         # noqa: E402
-from repro.tuner.autotune import autotune       # noqa: E402
+from repro.tuner.autotune import autotune_search  # noqa: E402
 from repro.tuner.objective import CompileCostObjective  # noqa: E402
+from repro.tuner.strategies import sharding_domain      # noqa: E402
 
 
-def main() -> None:
+def _reduced_cell():
     cfg = REGISTRY["qwen1.5-4b"].reduced()
     shape = dataclasses.replace(get_shape("train_4k"),
                                 seq_len=128, global_batch=8)
-    mesh = make_mesh(4, 2)
-    objective = CompileCostObjective(cfg, shape, mesh, verbose=True)
-    result = autotune(cfg, shape, mesh, budget=11, driver="cb_rbfopt",
-                      objective=objective)
-    print("\nbest strategy:", result["best_strategy"])
+    return cfg, shape
+
+
+@functools.lru_cache(maxsize=1)
+def _objective() -> CompileCostObjective:
+    cfg, shape = _reduced_cell()
+    return CompileCostObjective(cfg, shape, make_mesh(4, 2), verbose=True)
+
+
+def eval_reduced(params: dict, context: dict) -> dict:
+    t, report = _objective().evaluate(params["provider"],
+                                      dict(params["config"]))
+    return {"value": float(t), "report": report}
+
+
+register_objective(
+    "reduced_compile", eval_reduced,
+    domain_factory=lambda params: sharding_domain(*_reduced_cell()),
+    tags=("example", "compile"))
+
+
+def main() -> None:
+    result = autotune_search(bind_objective("reduced_compile"),
+                             budget=11, driver="cb_rbfopt")
+    print("\nbest strategy:", result["best_provider"])
     print("best config:  ", result["best_config"])
-    print(f"roofline step time: {result['best_t_step']*1e3:.3f} ms "
+    print(f"roofline step time: {result['best_value']*1e3:.3f} ms "
           f"({result['n_evals']} compiles spent)")
 
 

@@ -3,27 +3,32 @@
 selected cells (worst roofline fraction / most collective-bound / most
 representative), production pod mesh.
 
-Each arm pull = one XLA compile + roofline scoring.  Cells run as
-experiment-engine work units: full hypothesis->change->before->after
-histories land in results/hillclimb/<cell>.json, completed cells are
-recorded in results/expstore/hillclimb.jsonl so interrupted runs resume,
-and ``--workers N`` tunes N cells concurrently.
+Each arm pull = one XLA compile + roofline scoring, dispatched as a
+content-keyed ``eval`` work unit through one shared experiment engine:
+every evaluation lands in results/expstore/hillclimb.jsonl the moment it
+completes, so interrupted runs resume mid-search (a warm store replays
+with computed=0), and ``--workers N`` with ``--executor thread`` runs a
+CloudBandit round's batched arm pulls as N concurrent compiles.  Full
+hypothesis->change->before->after histories land in
+results/hillclimb/<cell>.json.
 """
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse  # noqa: E402
+import json      # noqa: E402
 import sys       # noqa: E402
 import time      # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.exp import ExperimentEngine, WorkUnit, open_store  # noqa: E402
-from repro.exp.runners import hillclimb_runner                 # noqa: E402
+from repro.exp import make_objective_engine, open_store  # noqa: E402
+from repro.tuner.autotune import autotune                # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT = os.path.join(ROOT, "results", "hillclimb")
+DRYRUN_DIR = os.path.join(ROOT, "results", "dryrun")
 STORE = os.path.join(ROOT, "results", "expstore", "hillclimb.jsonl")
 
 CELLS = [
@@ -40,11 +45,15 @@ CELLS = [
      "serving-path cell (memory-bound decode; tp_serve arm in play)"),
 ]
 
+BASELINE_KEYS = ("t_step", "t_compute", "t_memory", "t_collective",
+                 "bottleneck", "roofline_fraction", "peak_memory_per_chip",
+                 "strategy")
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=1,
-                    help="concurrent hillclimb cells")
+                    help="concurrent compile evaluations per driver batch")
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--executor", default=None,
                     choices=("serial", "thread", "process", "remote"),
@@ -54,49 +63,67 @@ def main():
                     help="remote executor host spec, e.g. "
                          "'local*2,ssh:user@host*8'")
     ap.add_argument("--timeout", type=float, default=None,
-                    help="per-cell wall-clock budget in seconds")
+                    help="per-evaluation wall-clock budget in seconds")
     ap.add_argument("--retries", type=int, default=0,
-                    help="extra attempts per cell after a failure/timeout")
+                    help="extra attempts per evaluation after a "
+                         "failure/timeout")
     ap.add_argument("--store-dir", default=None,
                     help="sharded result-store directory (multi-host "
                          "safe) instead of the single-file default")
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
 
-    units = [
-        WorkUnit.make("hillclimb", arch=arch, shape=shape, driver=driver,
-                      budget=budget)
-        for arch, shape, driver, budget, _why in CELLS
-        if not args.only or args.only in f"{arch}.{shape}"
-    ]
-    engine = ExperimentEngine(
-        hillclimb_runner,
-        # `why` is documentation, not identity: keep it out of the
-        # content hash so rewording a rationale never invalidates a
-        # multi-hour tuning run
-        local_context={"out_dir": OUT,
-                       "dryrun_dir": os.path.join(ROOT, "results", "dryrun"),
-                       "why_by_cell": {f"{a}.{s}": w
-                                       for a, s, _d, _b, w in CELLS}},
-        unit_timeout_s=args.timeout, retries=args.retries,
-        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
+    cells = [c for c in CELLS
+             if not args.only or args.only in f"{c[0]}.{c[1]}"]
+    # one shared engine: all cells' evaluations share the memoizing
+    # store and the executor backend
+    engine = make_objective_engine(
         store=open_store(args.store_dir or STORE), workers=args.workers,
-        executor=args.executor, verbose=True)
+        executor=args.executor,
+        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
+        unit_timeout_s=args.timeout, retries=args.retries)
     t0 = time.time()
+    failures = []
     with engine:
-        results = engine.run(units)
-    for res in results:
-        if res:
-            print(f"    {res['tag']}: best t={res['best_t_step']:.3f}s "
-                  f"({res['speedup_vs_baseline']:.2f}x) in {res['wall_s']}s",
+        for arch, shape, driver, budget, why in cells:
+            tag = f"{arch}.{shape}"
+            cell_t0 = time.time()
+            try:
+                res = autotune(arch, shape, budget=budget, driver=driver,
+                               engine=engine)
+            except Exception as exc:    # noqa: BLE001 — keep sweeping
+                failures.append(f"{tag}: {type(exc).__name__}: {exc}")
+                print(f"    {tag}: FAILED {exc}", file=sys.stderr,
+                      flush=True)
+                continue
+            res["why_chosen"] = why
+            res["wall_s"] = round(time.time() - cell_t0, 1)
+            base = {}
+            base_path = os.path.join(DRYRUN_DIR, f"{tag}.pod.json")
+            if os.path.exists(base_path):
+                with open(base_path) as f:
+                    base = json.load(f)
+            res["baseline"] = {k: base.get(k) for k in BASELINE_KEYS}
+            res["speedup_vs_baseline"] = (
+                base["t_step"] / res["best_t_step"]
+                if base.get("t_step") else None)
+            with open(os.path.join(OUT, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=2, default=str)
+            speedup = res["speedup_vs_baseline"]
+            print(f"    {tag}: best t={res['best_t_step']:.3f}s "
+                  f"({speedup:.2f}x vs baseline)" if speedup else
+                  f"    {tag}: best t={res['best_t_step']:.3f}s",
                   flush=True)
-    s = engine.stats
-    print(f"hillclimb done in {time.time() - t0:.0f}s: {s.total} cells, "
-          f"{s.cached} cached, {s.computed} run, {s.failed} failed",
+        lt = engine.lifetime
+    print(f"[exp] hillclimb: units={lt.total} unique={lt.unique} "
+          f"cached={lt.cached} computed={lt.computed} failed={lt.failed} "
+          f"retried={lt.retried}", file=sys.stderr, flush=True)
+    print(f"hillclimb done in {time.time() - t0:.0f}s: {len(cells)} cells, "
+          f"{lt.computed} evals compiled, {lt.cached} replayed",
           flush=True)
-    for e in s.errors:
+    for e in failures:
         print(f"  FAILED {e}", file=sys.stderr)
-    if s.failed:
+    if failures:
         sys.exit(1)
 
 

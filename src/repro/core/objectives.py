@@ -1,0 +1,382 @@
+"""Objective registry: every expensive black-box objective as a spec.
+
+The paper's premise is that search methods are generic over an expensive
+objective ``f(provider, config)``; this module makes the *objective* as
+pluggable as the search method.  Symmetric to the method registry
+(:mod:`repro.core.registry`), each objective family registers an
+:class:`ObjectiveSpec`:
+
+name
+    Registry key; also the ``objective`` field of evaluation-granular
+    work-unit content keys (omitted for ``offline`` so every
+    pre-registry store replays bit-identically).
+evaluate
+    A *worker-importable* ``module:qualname`` reference to a callable
+    ``(params, context) -> {"value": float, ...}`` — never a closure or
+    bound method, so the process/remote executors can resolve it by
+    name, exactly like the engine's runner refs (:func:`repro.exp.wire.
+    fn_ref`).
+domain_factory
+    Builds the search :class:`~repro.core.domain.Domain` for one
+    concrete parameterization (the offline table's provider grid, the
+    autotuner's strategy families for an (arch, shape), ...).
+params / defaults / context_params
+    The spec's JSON-canonical evaluation parameters.  ``context_params``
+    are routed into the *engine context* instead of the unit params —
+    ``offline``'s ``dataset_seed`` lives there so eval-unit content keys
+    stay exactly what they were before the registry existed.
+tags
+    Free-form labels (``"table"``, ``"measured"``, ``"compile"``, ...)
+    for filtering, mirroring method tags.
+
+A spec bound to concrete parameters is an :class:`ObjectiveBinding`: it
+mints content-keyed eval units, builds the domain, and contributes the
+engine context — the one object ``drive_units`` needs to run any search
+driver against any objective through the engine (store memoization,
+executor fan-out, timeouts, retries).
+
+Three builtins register here: ``offline`` (the paper's lookup table),
+``compile_cost`` (roofline-scored XLA compile of a sharding candidate,
+:mod:`repro.tuner.objective`), and ``dryrun`` (the full lower+compile
+cell via the existing ``python -m repro.launch.dryrun`` subprocess).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+#: domain factory signature: (params dict) -> Domain
+DomainFactory = Callable[[Dict[str, Any]], "object"]
+
+#: evaluate signature: (unit params, runner context) -> result dict with
+#: at least a "value" float
+EvaluateFn = Callable[[Dict[str, Any], Dict[str, Any]], dict]
+
+#: the default objective: bare (workload, target, provider, config) eval
+#: units with no ``objective`` field — the pre-registry content keys
+DEFAULT_OBJECTIVE = "offline"
+
+_JSON_SCALARS = (str, int, float, bool, type(None))
+
+
+def _fn_ref(fn: Any) -> str:
+    """``module:qualname`` for a module-level callable (reuses the wire
+    protocol's importability rules without importing the exp layer)."""
+    mod = getattr(fn, "__module__", None)
+    qual = getattr(fn, "__qualname__", None)
+    if not mod or not qual or "<" in qual or "." in qual:
+        raise TypeError(
+            f"objective evaluate fn must be a module-level callable "
+            f"importable by name, got {fn!r}")
+    return f"{mod}:{qual}"
+
+
+def _resolve_ref(ref: str) -> Any:
+    mod_name, _, qual = ref.partition(":")
+    obj: Any = importlib.import_module(mod_name)
+    for part in qual.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveSpec:
+    name: str
+    evaluate: str                       # worker-importable module:qualname
+    domain_factory: DomainFactory
+    params: Tuple[str, ...] = ()
+    defaults: Tuple[Tuple[str, Any], ...] = ()
+    context_params: Tuple[str, ...] = ()
+    tags: Tuple[str, ...] = ()
+
+    def canonical_params(self, overrides: Mapping[str, Any]
+                         ) -> Dict[str, Any]:
+        """Validate + canonicalize one parameterization: defaults
+        applied, unknown names rejected, values restricted to JSON
+        scalars (content keys must survive a JSON round-trip bit-for-
+        bit; a numpy int or a tuple would hash differently before and
+        after the wire)."""
+        unknown = sorted(set(overrides) - set(self.params))
+        if unknown:
+            raise ValueError(
+                f"objective {self.name!r} got unknown param(s) "
+                f"{unknown}; accepts: {list(self.params)}")
+        out = dict(self.defaults)
+        out.update(overrides)
+        missing = sorted(set(self.params) - set(out))
+        if missing:
+            raise ValueError(
+                f"objective {self.name!r} missing required param(s) "
+                f"{missing}")
+        for k, v in out.items():
+            if not isinstance(v, _JSON_SCALARS):
+                raise ValueError(
+                    f"objective {self.name!r} param {k}={v!r} is not a "
+                    f"JSON scalar (str/int/float/bool/None)")
+        return {k: out[k] for k in sorted(out)}
+
+    def bind(self, **params: Any) -> "ObjectiveBinding":
+        return ObjectiveBinding(
+            self, tuple(sorted(self.canonical_params(params).items())))
+
+    def resolve(self) -> EvaluateFn:
+        return _resolve_ref(self.evaluate)
+
+    def run(self, unit_params: Dict[str, Any],
+            context: Dict[str, Any]) -> dict:
+        """Evaluate one unit worker-side; result must carry "value"."""
+        result = self.resolve()(unit_params, context)
+        if not isinstance(result, dict) or "value" not in result:
+            raise TypeError(
+                f"objective {self.name!r} evaluate must return a dict "
+                f"with a 'value' field, got {type(result).__name__}")
+        return result
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveBinding:
+    """A spec bound to one concrete parameterization — everything the
+    driver-runner needs: unit minting, domain, engine context."""
+    spec: ObjectiveSpec
+    params: Tuple[Tuple[str, Any], ...]     # canonical (name, value) pairs
+
+    def param(self, name: str) -> Any:
+        return dict(self.params)[name]
+
+    def unit_params(self) -> Dict[str, Any]:
+        """Eval-unit identity params (``context_params`` excluded — they
+        ride in the engine context, like ``offline``'s dataset seed
+        always has)."""
+        return {k: v for k, v in self.params
+                if k not in self.spec.context_params}
+
+    def context(self) -> Dict[str, Any]:
+        """Code-relevant engine context this binding requires; the
+        engine folds it into every unit's content hash."""
+        return {k: v for k, v in self.params
+                if k in self.spec.context_params}
+
+    def unit(self, provider: str, config: Mapping[str, Any]):
+        """Content-keyed eval unit for one (provider, config) request.
+
+        The key carries (objective, objective params, provider,
+        canonical config) — never the method, seed, or budget that
+        requested it, so every search touching the same point shares
+        one stored record.  For ``offline`` the ``objective`` field is
+        omitted entirely: pre-registry stores replay bit-identically.
+        """
+        from repro.exp.engine import WorkUnit
+        kw = self.unit_params()
+        if self.spec.name != DEFAULT_OBJECTIVE:
+            kw["objective"] = self.spec.name
+        return WorkUnit.make("eval", provider=provider,
+                             config=tuple(sorted(config.items())), **kw)
+
+    def make_domain(self):
+        return self.spec.domain_factory(dict(self.params))
+
+    def describe(self) -> str:
+        inner = ", ".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.spec.name}({inner})"
+
+
+_REGISTRY: Dict[str, ObjectiveSpec] = {}    # insertion order preserved
+_builtin_loaded = False
+
+
+def _ensure_builtin() -> None:
+    """Builtins register lazily, gated on a flag (not on registry
+    non-emptiness) — an external ``register_objective`` call arriving
+    first must not hide or collide with them at a later read site.
+    Mirrors :func:`repro.core.registry._ensure_builtin`."""
+    global _builtin_loaded
+    if not _builtin_loaded:
+        _builtin_loaded = True
+        try:
+            _register_builtins()
+        except BaseException:
+            _builtin_loaded = False
+            raise
+
+
+def register_objective(name: str,
+                       evaluate: Optional[Any] = None, *,
+                       domain_factory: DomainFactory,
+                       params: Tuple[str, ...] = (),
+                       defaults: Optional[Mapping[str, Any]] = None,
+                       context_params: Tuple[str, ...] = (),
+                       tags: Tuple[str, ...] = ()) -> ObjectiveSpec:
+    """Register an objective family.
+
+    ``evaluate`` is a ``module:qualname`` string or a module-level
+    callable (the ref is derived, same importability contract as the
+    remote wire protocol).  Workers resolve the objective by *name*
+    from this registry, so a custom objective's defining module must be
+    importable worker-side — pass it via the engine's
+    ``local_context["objective_modules"]`` for process/remote backends.
+    """
+    if callable(evaluate):
+        evaluate = _fn_ref(evaluate)
+    if not isinstance(evaluate, str) or ":" not in evaluate:
+        raise TypeError(
+            f"evaluate must be a module:qualname ref or module-level "
+            f"callable, got {evaluate!r}")
+    bad_ctx = sorted(set(context_params) - set(params))
+    if bad_ctx:
+        raise ValueError(f"context_params {bad_ctx} not in params")
+    if name in _REGISTRY:
+        raise ValueError(f"objective {name!r} already registered")
+    spec = ObjectiveSpec(
+        name=name, evaluate=evaluate, domain_factory=domain_factory,
+        params=tuple(params),
+        defaults=tuple(sorted((defaults or {}).items())),
+        context_params=tuple(context_params), tags=tuple(tags))
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_objective(name: str) -> ObjectiveSpec:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown objective {name!r}; registered: "
+            f"{', '.join(_REGISTRY)}") from None
+
+
+def bind_objective(name: str, **params: Any) -> ObjectiveBinding:
+    return get_objective(name).bind(**params)
+
+
+def objective_names(tag: Optional[str] = None) -> Tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(n for n, s in _REGISTRY.items()
+                 if tag is None or tag in s.tags)
+
+
+def objective_specs() -> Tuple[ObjectiveSpec, ...]:
+    _ensure_builtin()
+    return tuple(_REGISTRY.values())
+
+
+# ---------------------------------------------------------------------------
+# Builtin: offline — the paper's 30×88 lookup table
+# ---------------------------------------------------------------------------
+def eval_offline(params: Dict[str, Any], context: Dict[str, Any]) -> dict:
+    """One table lookup.  Payload and identity are byte-for-byte the
+    pre-registry ``eval`` unit's: ``{"value": float}``, keyed by
+    (workload, target, provider, config) + the context's dataset seed."""
+    from repro.multicloud.dataset import build_dataset
+    ds = build_dataset(int(context.get("dataset_seed", 0)))
+    task = ds.task(params["workload"], params["target"])
+    return {"value": float(task.objective(params["provider"],
+                                          dict(params["config"])))}
+
+
+def _offline_domain(params: Dict[str, Any]):
+    from repro.multicloud.providers import multicloud_domain
+    return multicloud_domain()
+
+
+# ---------------------------------------------------------------------------
+# Builtin: compile_cost — roofline-scored XLA compile (seconds/eval)
+# ---------------------------------------------------------------------------
+def _sharding_domain(params: Dict[str, Any]):
+    from repro.configs import get_config, get_shape
+    from repro.tuner.strategies import sharding_domain
+    return sharding_domain(get_config(params["arch"]),
+                           get_shape(params["shape"]))
+
+
+# ---------------------------------------------------------------------------
+# Builtin: dryrun — full lower+compile cell via the existing subprocess
+# entry point (each cell needs the 512-device XLA flag set before jax
+# imports, so it can never run in-process)
+# ---------------------------------------------------------------------------
+#: the ModelOpts knobs the dryrun CLI accepts; anything else in a config
+#: would be silently dropped, so it is rejected instead
+_DRYRUN_KNOBS = ("attn_chunk", "ce_chunk", "remat", "banded_local")
+
+
+def dryrun_command(params: Dict[str, Any], out_path: str) -> list:
+    """Pure command construction for one dryrun evaluation (split out so
+    the mapping is testable without paying a compile)."""
+    config = dict(params["config"])
+    unknown = sorted(set(config) - set(_DRYRUN_KNOBS))
+    if unknown:
+        raise ValueError(
+            f"dryrun objective got unknown config knob(s) {unknown}; "
+            f"accepts: {list(_DRYRUN_KNOBS)}")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", params["arch"], "--shape", params["shape"],
+           "--strategy", params["provider"], "--out", out_path]
+    if params.get("mesh", "pod") == "multipod":
+        cmd.append("--multi-pod")
+    if "attn_chunk" in config:
+        cmd += ["--attn-chunk", str(int(config["attn_chunk"]))]
+    if "ce_chunk" in config:
+        cmd += ["--ce-chunk", str(int(config["ce_chunk"]))]
+    if "remat" in config:
+        cmd += ["--remat", str(config["remat"])]
+    if config.get("banded_local"):
+        cmd.append("--banded-local")
+    return cmd
+
+
+def eval_dryrun(params: Dict[str, Any], context: Dict[str, Any]) -> dict:
+    """Lower + compile one (strategy, config) cell in a subprocess and
+    score it by roofline step time — the most expensive fidelity."""
+    from repro.exp.runners import subprocess_timeout
+    out_dir = context.get("out_dir") or os.path.join("results", "dryrun_evals")
+    os.makedirs(out_dir, exist_ok=True)
+    cfg_tag = "_".join(
+        f"{k}-{v}" for k, v in sorted(dict(params["config"]).items()))
+    tag = ".".join([params["arch"], params["shape"],
+                    params.get("mesh", "pod"), params["provider"],
+                    cfg_tag or "default"])
+    out = os.path.join(out_dir, tag + ".json")
+    cmd = dryrun_command(params, out)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = context.get("src_path", "src")
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=subprocess_timeout(context), env=env)
+    except subprocess.TimeoutExpired:
+        raise RuntimeError(f"dryrun eval {tag}: timeout")
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"dryrun eval {tag}: exit {r.returncode}: {r.stderr[-2000:]}")
+    with open(out) as f:
+        report = json.load(f)
+    if "skipped" in report:
+        raise RuntimeError(f"dryrun eval {tag}: skipped cell "
+                           f"({report['skipped']})")
+    return {"value": float(report["t_step"]), "report": report}
+
+
+def _register_builtins() -> None:
+    register_objective(
+        "offline", "repro.core.objectives:eval_offline",
+        domain_factory=_offline_domain,
+        params=("workload", "target", "dataset_seed"),
+        defaults={"dataset_seed": 0},
+        context_params=("dataset_seed",),
+        tags=("table", "paper"))
+    register_objective(
+        "compile_cost", "repro.tuner.objective:eval_compile_cost",
+        domain_factory=_sharding_domain,
+        params=("arch", "shape", "mesh"),
+        defaults={"mesh": "pod"},
+        tags=("measured", "compile", "roofline"))
+    register_objective(
+        "dryrun", "repro.core.objectives:eval_dryrun",
+        domain_factory=_sharding_domain,
+        params=("arch", "shape", "mesh"),
+        defaults={"mesh": "pod"},
+        tags=("measured", "compile", "subprocess"))

@@ -5,8 +5,8 @@ from repro.exp.executors import (
     RemoteExecutor, SerialExecutor, SSHTransport, ThreadExecutor,
     WorkerTransport, make_executor, parse_hosts)
 from repro.exp.protocols import (
-    BUDGET_COUPLED, GRANULARITIES, make_engine, predictive_regret,
-    regret_curves, savings_distribution)
+    BUDGET_COUPLED, GRANULARITIES, make_engine, make_objective_engine,
+    predictive_regret, regret_curves, savings_distribution)
 from repro.exp.runners import drive_units, eval_unit
 from repro.exp.store import (
     BaseResultStore, ResultStore, ShardedResultStore, merge_stores,
@@ -20,7 +20,8 @@ __all__ = [
     "RemoteTaskError", "ResultStore", "SSHTransport", "SerialExecutor",
     "ShardedResultStore", "ThreadExecutor", "UnitTimeout", "WorkUnit",
     "WorkerDied", "WorkerTransport", "drive_units", "eval_unit",
-    "make_engine", "make_executor", "merge_stores", "open_store",
+    "make_engine", "make_executor", "make_objective_engine",
+    "merge_stores", "open_store",
     "parse_hosts", "predictive_regret", "regret_curves",
     "savings_distribution", "unit_key",
 ]

@@ -32,6 +32,10 @@ sharded directory — detected from the path):
     List the registered search methods (name, budget-coupling, tags)
     from the method registry — the same metadata ``run_search``, the
     figure protocols, and the benchmarks introspect.
+``objectives [--tag TAG]``
+    List the registered objectives (name, eval params with defaults,
+    worker-importable evaluate ref, tags) from the objective registry —
+    what ``eval`` work units and the autotuner dispatch against.
 """
 from __future__ import annotations
 
@@ -137,6 +141,24 @@ def _cmd_methods(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_objectives(args: argparse.Namespace) -> int:
+    from repro.core.objectives import objective_specs
+    specs = [s for s in objective_specs()
+             if args.tag is None or args.tag in s.tags]
+    if not specs:
+        print(f"no objectives tagged {args.tag!r}", file=sys.stderr)
+        return 1
+    width = max(len(s.name) for s in specs)
+    for s in specs:
+        defaults = dict(s.defaults)
+        params = ", ".join(
+            f"{p}={defaults[p]!r}" if p in defaults else p
+            for p in s.params)
+        print(f"{s.name:<{width}}  ({params})  {s.evaluate}  "
+              f"{','.join(s.tags)}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.exp",
@@ -173,6 +195,12 @@ def main(argv=None) -> int:
     p.add_argument("--tag", default=None,
                    help="filter by registry tag (e.g. flat, bandit, sota)")
     p.set_defaults(fn=_cmd_methods)
+
+    p = sub.add_parser("objectives", help="list registered objectives")
+    p.add_argument("--tag", default=None,
+                   help="filter by registry tag (e.g. table, measured, "
+                        "compile)")
+    p.set_defaults(fn=_cmd_objectives)
 
     p = sub.add_parser("worker", help="remote execution worker "
                                       "(framed JSONL over stdio)")

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.objectives import bind_objective
 from repro.core.registry import BUDGET_COUPLED, get_method
 from repro.exp.engine import ExperimentEngine, WorkUnit
 from repro.exp.executors import ExecutorSpec
@@ -41,6 +42,43 @@ from repro.exp.runners import drive_units, search_runner
 from repro.exp.store import BaseResultStore, ResultStore, open_store
 
 GRANULARITIES = ("run", "eval")
+
+
+def make_objective_engine(*, context: Optional[dict] = None,
+                          workers: int = 1,
+                          store: Optional[BaseResultStore] = None,
+                          store_path: Optional[str] = None,
+                          store_dir: Optional[str] = None,
+                          executor: ExecutorSpec = None,
+                          executor_kwargs: Optional[dict] = None,
+                          unit_timeout_s: Optional[float] = None,
+                          retries: int = 0,
+                          mp_context: Optional[str] = None,
+                          local_context: Optional[dict] = None
+                          ) -> ExperimentEngine:
+    """Engine wired for objective evaluation units (any registered
+    objective — offline table, compile cost, dryrun).
+
+    ``context`` carries code-relevant identity (e.g. the offline
+    objective's ``dataset_seed``) and is folded into every unit's
+    content hash; ``local_context`` carries operational knobs runners
+    need but which must not affect identity (``out_dir``, ``src_path``,
+    ``objective_modules`` for custom objectives on process/remote
+    workers).  ``store_dir`` selects the sharded multi-writer layout;
+    ``store_path`` the single-file one; ``store`` injects any prebuilt
+    store.  ``unit_timeout_s``/``retries`` are the engine's
+    fault-tolerance budget (operational too); ``executor_kwargs``
+    reaches the backend constructor (e.g. ``hosts=`` for the remote
+    executor).
+    """
+    if store is None:
+        store = open_store(store_dir) if store_dir else ResultStore(store_path)
+    return ExperimentEngine(
+        search_runner, context=dict(context or {}),
+        store=store, workers=workers, executor=executor,
+        executor_kwargs=executor_kwargs, unit_timeout_s=unit_timeout_s,
+        retries=retries, mp_context=mp_context,
+        local_context=local_context)
 
 
 def make_engine(dataset, *, workers: int = 1,
@@ -51,24 +89,16 @@ def make_engine(dataset, *, workers: int = 1,
                 executor_kwargs: Optional[dict] = None,
                 unit_timeout_s: Optional[float] = None, retries: int = 0,
                 mp_context: Optional[str] = None) -> ExperimentEngine:
-    """Engine wired for offline-dataset search units.
-
-    The content-hash context carries the dataset collection seed: a
-    dataset rebuilt with another seed never replays stale results.
-    ``store_dir`` selects the sharded multi-writer layout; ``store_path``
-    the single-file one; ``store`` injects any prebuilt store.
-    ``unit_timeout_s``/``retries`` are the engine's fault-tolerance
-    budget (operational — they never touch content hashes);
-    ``executor_kwargs`` reaches the backend constructor (e.g. ``hosts=``
-    for the remote executor).
-    """
-    if store is None:
-        store = open_store(store_dir) if store_dir else ResultStore(store_path)
-    return ExperimentEngine(
-        search_runner, context={"dataset_seed": int(dataset.seed)},
-        store=store, workers=workers, executor=executor,
-        executor_kwargs=executor_kwargs, unit_timeout_s=unit_timeout_s,
-        retries=retries, mp_context=mp_context)
+    """Engine wired for offline-dataset search units: an objective
+    engine whose content-hash context carries the dataset collection
+    seed, so a dataset rebuilt with another seed never replays stale
+    results."""
+    return make_objective_engine(
+        context={"dataset_seed": int(dataset.seed)}, workers=workers,
+        store=store, store_path=store_path, store_dir=store_dir,
+        executor=executor, executor_kwargs=executor_kwargs,
+        unit_timeout_s=unit_timeout_s, retries=retries,
+        mp_context=mp_context)
 
 
 def _search_unit(method: str, workload: str, target: str, seed: int,
@@ -98,7 +128,9 @@ def _run_cells(engine: ExperimentEngine, dataset,
             out.append(res["values"])
         return out
     driver_cells = [
-        (get_method(m).make_driver(dataset.domain, b, s, target=t), w, t)
+        (get_method(m).make_driver(dataset.domain, b, s, target=t),
+         bind_objective("offline", workload=w, target=t,
+                        dataset_seed=int(dataset.seed)))
         for m, w, t, s, b in cells
     ]
     return [h.values for h in drive_units(engine, driver_cells)]

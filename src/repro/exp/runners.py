@@ -10,23 +10,29 @@ Two granularities of search work unit share :func:`search_runner`:
     One whole (method, workload, target, seed, budget) run — the unit
     the protocols historically fanned out.
 ``eval``
-    One objective evaluation ``(workload, target, provider, config)``.
-    Emitted by :func:`drive_units`, the driver-runner that executes
-    suspendable search drivers in-process and dispatches every batch of
-    evaluation requests they yield through the engine — so identical
-    evaluations are memoized across methods, seeds, and the budget
-    grid, and a batch's requests fan out through whatever executor
-    backend the engine is wired with.  Note the unit's content key has
-    no method/seed/budget in it: that is what makes the cache shared.
+    One objective evaluation ``(provider, config)`` against a
+    registered objective (:mod:`repro.core.objectives`) — the offline
+    table by default, a compile measurement when the unit carries an
+    ``objective`` field.  Emitted by :func:`drive_units`, the
+    driver-runner that executes suspendable search drivers in-process
+    and dispatches every batch of evaluation requests they yield
+    through the engine — so identical evaluations are memoized across
+    methods, seeds, and the budget grid, and a batch's requests fan out
+    through whatever executor backend the engine is wired with.  Note
+    the unit's content key has no method/seed/budget in it: that is
+    what makes the cache shared.
 """
 from __future__ import annotations
 
+import importlib
 import json
 import os
 import subprocess
 import sys
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple, Union
 
+from repro.core.objectives import ObjectiveBinding, bind_objective, \
+    get_objective
 from repro.exp.engine import EngineStats, ExperimentEngine, WorkUnit
 
 
@@ -36,9 +42,22 @@ from repro.exp.engine import EngineStats, ExperimentEngine, WorkUnit
 def search_runner(kind: str, params: Dict[str, Any],
                   context: Dict[str, Any]) -> dict:
     """Execute one (method, workload, target, seed[, budget]) cell against
-    the offline dataset.  ``build_dataset`` is memoized, so each worker
-    process pays the dataset build at most once (and forked workers
-    inherit the parent's copy for free)."""
+    the offline dataset, or one ``eval`` unit against whatever objective
+    its content key names.  ``build_dataset`` is memoized, so each
+    worker process pays the dataset build at most once (and forked
+    workers inherit the parent's copy for free)."""
+    if kind == "eval":
+        # one objective evaluation, dispatched through the objective
+        # registry.  Custom objectives register at import time, so the
+        # operational ``objective_modules`` context hook lets process /
+        # remote workers import their defining modules first.  A unit
+        # without an ``objective`` field is an offline-table lookup —
+        # the pre-registry content key, preserved bit-for-bit.
+        for mod in context.get("objective_modules", ()) or ():
+            importlib.import_module(mod)
+        spec = get_objective(params.get("objective", "offline"))
+        return spec.run(params, context)
+
     from repro.core.evaluate import run_predictive, run_search
     from repro.multicloud.dataset import build_dataset
 
@@ -57,12 +76,6 @@ def search_runner(kind: str, params: Dict[str, Any],
                 "value": float(out["value"]),
                 "provider": out["provider"],
                 "online_evals": int(out["online_evals"])}
-    if kind == "eval":
-        # one objective evaluation; params["config"] is the canonical
-        # sorted (name, value) pair list (tuples in-process, lists after
-        # a JSON round-trip — dict() accepts both)
-        val = task.objective(params["provider"], dict(params["config"]))
-        return {"value": float(val)}
     raise ValueError(f"unknown unit kind {kind!r}")
 
 
@@ -71,52 +84,90 @@ def search_runner(kind: str, params: Dict[str, Any],
 # ---------------------------------------------------------------------------
 def eval_unit(workload: str, target: str, provider: str,
               config: dict) -> WorkUnit:
-    """Content-keyed unit for one objective evaluation.  The key is
+    """Content-keyed unit for one offline-table evaluation.  The key is
     volatile-safe: it hashes only (workload, target, provider, canonical
     config) plus the engine context (dataset seed) — never the method,
     seed, or budget that happened to request it — so every search that
-    touches the same point shares one stored record."""
+    touches the same point shares one stored record.
+
+    Kept as the offline fast path; other objectives mint units through
+    :meth:`repro.core.objectives.ObjectiveBinding.unit`, which emits
+    exactly this key shape for ``offline`` bindings.
+    """
     return WorkUnit.make("eval", workload=workload, target=target,
                          provider=provider,
                          config=tuple(sorted(config.items())))
 
 
+#: a drive_units cell: (driver, binding), or the legacy offline triple
+#: (driver, workload, target)
+DriveCell = Union[Tuple[Any, ObjectiveBinding], Tuple[Any, str, str]]
+
+
+def _normalize_cells(engine: ExperimentEngine,
+                     cells: Sequence[DriveCell]) -> List[Tuple[Any, Any]]:
+    """Resolve every cell to (driver, binding), binding legacy
+    (driver, workload, target) triples to the offline objective at the
+    engine's dataset seed.  Each binding's required context must agree
+    with the engine's — a mismatched dataset seed would silently key
+    units against the wrong table."""
+    out = []
+    for cell in cells:
+        if len(cell) == 3:
+            drv, w, t = cell
+            binding = bind_objective(
+                "offline", workload=w, target=t,
+                dataset_seed=int(engine.context.get("dataset_seed", 0)))
+        else:
+            drv, binding = cell
+        for k, v in binding.context().items():
+            have = engine.context.get(k, v)
+            if have != v:
+                raise ValueError(
+                    f"objective binding {binding.describe()} requires "
+                    f"context {k}={v!r} but engine has {k}={have!r}")
+        out.append((drv, binding))
+    return out
+
+
 def drive_units(engine: ExperimentEngine,
-                cells: Sequence[Tuple[Any, str, str]]) -> List[Any]:
+                cells: Sequence[DriveCell]) -> List[Any]:
     """Run suspendable search drivers to completion at evaluation
     granularity.
 
-    ``cells`` is a sequence of ``(driver, workload, target)``.  Each
-    iteration gathers one ``ask_batch`` from every unfinished driver,
-    submits the union as ``eval`` units through the engine — which
-    dedups identical requests within the round, replays already-stored
-    evaluations, and fans the rest out through its executor backend —
-    then tells each driver its results in request order.  Driver state
-    machines are deterministic, so histories are bit-identical to the
-    inline closed loop regardless of executor, worker count, or store
-    warmth.
+    ``cells`` is a sequence of ``(driver, binding)`` pairs — any
+    registered objective bound to concrete parameters — or legacy
+    ``(driver, workload, target)`` triples, which mean the offline
+    table at the engine's dataset seed.  Each iteration gathers one
+    ``ask_batch`` from every unfinished driver, submits the union as
+    ``eval`` units through the engine — which dedups identical requests
+    within the round, replays already-stored evaluations, and fans the
+    rest out through its executor backend — then tells each driver its
+    results in request order.  Driver state machines are deterministic,
+    so histories are bit-identical to the inline closed loop regardless
+    of executor, worker count, or store warmth.
 
     Returns one :class:`~repro.core.optimizers.base.History` per cell.
     On return ``engine.stats`` holds the totals accumulated over all
     rounds of this call (``engine.lifetime`` accumulates as usual).
     """
-    cells = list(cells)
+    pairs = _normalize_cells(engine, cells)
     agg = EngineStats()
     pending: Dict[int, list] = {}
-    active = [i for i, (drv, _w, _t) in enumerate(cells) if not drv.done]
+    active = [i for i, (drv, _b) in enumerate(pairs) if not drv.done]
     while active:
         units: List[WorkUnit] = []
         for i in active:
-            drv, w, t = cells[i]
+            drv, binding = pairs[i]
             batch = drv.ask_batch()
             pending[i] = batch
-            units.extend(eval_unit(w, t, prov, cfg) for prov, cfg in batch)
+            units.extend(binding.unit(prov, cfg) for prov, cfg in batch)
         results = engine.run(units)
         agg.absorb(engine.stats)
         pos = 0
         still_active = []
         for i in active:
-            drv, w, t = cells[i]
+            drv, binding = pairs[i]
             batch = pending.pop(i)
             values = []
             for prov, _cfg in batch:
@@ -124,7 +175,8 @@ def drive_units(engine: ExperimentEngine,
                 pos += 1
                 if res is None:
                     raise RuntimeError(
-                        f"eval unit failed for {w}/{t}/{prov}: "
+                        f"eval unit failed for {binding.describe()}"
+                        f"/{prov}: "
                         + "; ".join(engine.stats.errors[:3]))
                 values.append(res["value"])
             drv.tell_batch(values)
@@ -132,7 +184,7 @@ def drive_units(engine: ExperimentEngine,
                 still_active.append(i)
         active = still_active
     engine.stats = agg
-    return [drv.history for drv, _w, _t in cells]
+    return [drv.history for drv, _b in pairs]
 
 
 def subprocess_timeout(context: Dict[str, Any],
@@ -203,49 +255,3 @@ def dryrun_runner(kind: str, params: Dict[str, Any],
         os.remove(err)
     with open(out) as f:
         return json.load(f)
-
-
-# ---------------------------------------------------------------------------
-# Hillclimb units (sharding autotuner on one selected cell)
-# ---------------------------------------------------------------------------
-def hillclimb_runner(kind: str, params: Dict[str, Any],
-                     context: Dict[str, Any]) -> dict:
-    if kind != "hillclimb":
-        raise ValueError(kind)
-    import time
-
-    from repro.configs import get_config, get_shape
-    from repro.launch.mesh import make_production_mesh
-    from repro.tuner.autotune import autotune
-    from repro.tuner.objective import CompileCostObjective
-
-    arch, shape_name = params["arch"], params["shape"]
-    driver, budget = params["driver"], int(params["budget"])
-    out_dir = context["out_dir"]
-    os.makedirs(out_dir, exist_ok=True)
-    tag = f"{arch}.{shape_name}"
-
-    cfg = get_config(arch)
-    shape = get_shape(shape_name)
-    mesh = make_production_mesh(multi_pod=False)
-    with open(os.path.join(context["dryrun_dir"],
-                           f"{tag}.pod.json")) as f:
-        base = json.load(f)
-    t0 = time.time()
-    objective = CompileCostObjective(cfg, shape, mesh,
-                                     verbose=context.get("verbose", True))
-    res = autotune(cfg, shape, mesh, budget=budget, driver=driver,
-                   objective=objective)
-    res["why_chosen"] = context.get("why_by_cell", {}).get(tag, "")
-    res["baseline"] = {k: base.get(k) for k in (
-        "t_step", "t_compute", "t_memory", "t_collective",
-        "bottleneck", "roofline_fraction", "peak_memory_per_chip",
-        "strategy")}
-    res["wall_s"] = round(time.time() - t0, 1)
-    res["speedup_vs_baseline"] = (
-        base["t_step"] / res["best_t_step"] if base.get("t_step") else None)
-    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
-        json.dump(res, f, indent=2, default=str)
-    return {"tag": tag, "best_t_step": res["best_t_step"],
-            "speedup_vs_baseline": res["speedup_vs_baseline"],
-            "wall_s": res["wall_s"]}

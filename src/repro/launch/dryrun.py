@@ -1,11 +1,18 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+if __name__ == "__main__":                      # pragma: no cover
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST stay the very first statements (before any other
-import, including ``repro.*``): jax locks the device count on first init,
-and only the dry-run is allowed to see 512 placeholder devices.
+The guarded env-set above MUST stay the very first statement (before any
+other import, including ``repro.*``): jax locks the device count on
+first init, and only the dry-run *process* is allowed to see 512
+placeholder devices.  The ``__main__`` guard keeps a mere import of this
+module (tests, the objective registry) from contaminating the importing
+process's environment — only the CLI entry point flips the flag, and
+every caller invokes it as a subprocess.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b \
@@ -21,7 +28,7 @@ import jax           # noqa: E402
 from repro.analysis.roofline import roofline_from_compiled   # noqa: E402
 from repro.configs import get_config, get_shape, shapes_for  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_chip_count  # noqa: E402
-from repro.launch.steps import build_plan                    # noqa: E402
+from repro.launch.steps import build_plan, default_attn_chunk  # noqa: E402
 from repro.models.blocks import ModelOpts                    # noqa: E402
 
 
@@ -62,25 +69,41 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "n_active_params": cfg.n_active_params(),
     })
     if verbose:
+        # diagnostics go to stderr: stdout belongs to --out/JSON piping
+        err = sys.stderr
         print(f"== {arch} × {shape_name} × "
               f"{'multipod(2,16,16)' if multi_pod else 'pod(16,16)'} "
-              f"[{strategy}] ==")
-        print(mem)
+              f"[{strategy}] ==", file=err)
+        print(mem, file=err)
         from repro.analysis.hlo_cost import HloCostAnalysis
         c = HloCostAnalysis(compiled.as_text()).entry_cost()
         top = sorted(c.bytes_by_op.items(), key=lambda kv: -kv[1])[:8]
-        print("bytes_by_op:", {k: f"{v:.2e}" for k, v in top})
+        print("bytes_by_op:", {k: f"{v:.2e}" for k, v in top}, file=err)
         ca = compiled.cost_analysis()
         if isinstance(ca, (list, tuple)):       # jax < 0.5 returns [dict]
             ca = ca[0] if ca else {}
         print({k: v for k, v in ca.items()
-               if k in ("flops", "bytes accessed")})
+               if k in ("flops", "bytes accessed")}, file=err)
         print(json.dumps(
             {k: result[k] for k in
              ("t_compute", "t_memory", "t_collective", "bottleneck",
               "roofline_fraction", "useful_flops_fraction",
-              "peak_memory_per_chip")}, indent=2))
+              "peak_memory_per_chip")}, indent=2), file=err)
     return result
+
+
+def opts_from_cli(args) -> "ModelOpts | None":
+    """ModelOpts for the explicitly-set CLI flags, or ``None`` when every
+    flag is at its default (``build_plan`` then applies its own per-arch
+    defaulting).  The ``--attn-chunk 0`` sentinel resolves to the same
+    per-arch default even when another flag forces an opts object — it
+    must never silently become a flat 512."""
+    if not (args.attn_chunk or args.ce_chunk != 1024
+            or args.remat != "full" or args.banded_local):
+        return None
+    attn = args.attn_chunk or default_attn_chunk(get_config(args.arch))
+    return ModelOpts(attn_chunk=attn, ce_chunk=args.ce_chunk,
+                     remat=args.remat, banded_local=args.banded_local)
 
 
 def main() -> None:
@@ -97,19 +120,13 @@ def main() -> None:
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    opts = None
-    if args.attn_chunk or args.ce_chunk != 1024 or args.remat != "full" \
-            or args.banded_local:
-        opts = ModelOpts(attn_chunk=args.attn_chunk or 512,
-                         ce_chunk=args.ce_chunk, remat=args.remat,
-                         banded_local=args.banded_local)
     result = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
-                      strategy=args.strategy, opts=opts)
+                      strategy=args.strategy, opts=opts_from_cli(args))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)
     if "skipped" in result:
-        print(f"SKIPPED: {result['skipped']}")
+        print(f"SKIPPED: {result['skipped']}", file=sys.stderr)
         sys.exit(0)
 
 

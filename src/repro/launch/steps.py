@@ -181,6 +181,13 @@ class LoweringPlan:
     donate: Tuple[int, ...] = ()
 
 
+def default_attn_chunk(cfg: ArchConfig) -> int:
+    """Per-arch default attention chunk: smaller for archs whose
+    (replicated-head) score blocks would otherwise dominate the per-chip
+    transient footprint."""
+    return 256 if cfg.family == "vlm" else 512
+
+
 def build_plan(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
                strategy: str = "fsdp_tp", opts: Optional[ModelOpts] = None,
                rules: Optional[AxisRules] = None) -> LoweringPlan:
@@ -188,9 +195,7 @@ def build_plan(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
     rules = rules or make_rules(cfg, shape, mesh, strategy)
     ctx = ShardCtx(mesh=mesh, rules=rules)
     if opts is None:
-        # smaller attention chunks for archs whose (replicated-head) score
-        # blocks would otherwise dominate the per-chip transient footprint
-        opts = ModelOpts(attn_chunk=256 if cfg.family == "vlm" else 512)
+        opts = ModelOpts(attn_chunk=default_attn_chunk(cfg))
 
     spec = model.param_spec()
     batch_sds = input_specs(cfg, shape)

@@ -1,5 +1,6 @@
 from repro.tuner.strategies import sharding_domain
 from repro.tuner.objective import CompileCostObjective
-from repro.tuner.autotune import autotune
+from repro.tuner.autotune import autotune, autotune_reference, autotune_search
 
-__all__ = ["sharding_domain", "CompileCostObjective", "autotune"]
+__all__ = ["sharding_domain", "CompileCostObjective", "autotune",
+           "autotune_reference", "autotune_search"]

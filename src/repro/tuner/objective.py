@@ -7,11 +7,19 @@ exactly the regime CloudBandit is designed for.  Configurations that exceed
 the per-chip HBM budget are penalized proportionally to the overrun (they
 are "feasible but terrible", like an undersized cloud VM, rather than
 excluded — mirroring how the paper's objective treats swapping configs).
+
+Memoization of repeat evaluations is the engine result store's job, not
+this module's: :func:`eval_compile_cost` is the ``compile_cost``
+objective's worker-importable evaluate fn (see
+:mod:`repro.core.objectives`), and every evaluation it performs lands as
+a content-keyed record the store replays with ``computed=0``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+import functools
+import sys
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 
@@ -21,9 +29,17 @@ from repro.launch.mesh import mesh_chip_count
 from repro.launch.steps import build_plan, make_rules
 from repro.models.blocks import ModelOpts
 
+#: the ModelOpts knobs a search config may set; anything else is a
+#: typo'd search space and must fail loudly, not evaluate the base model
+CONFIG_KEYS = ("remat", "attn_chunk", "ce_chunk", "banded_local")
+
 
 def opts_from_config(config: dict, base: Optional[ModelOpts] = None
                      ) -> ModelOpts:
+    unknown = sorted(set(config) - set(CONFIG_KEYS))
+    if unknown:
+        raise ValueError(
+            f"unknown config key(s) {unknown}; accepts: {list(CONFIG_KEYS)}")
     base = base or ModelOpts()
     return dataclasses.replace(
         base,
@@ -42,16 +58,7 @@ class CompileCostObjective:
     hbm_budget: float = HW["hbm_bytes"]
     verbose: bool = True
 
-    def __post_init__(self):
-        self._cache: Dict[Tuple, Tuple[float, dict]] = {}
-
-    def _key(self, strategy: str, config: dict) -> Tuple:
-        return (strategy, tuple(sorted(config.items())))
-
     def evaluate(self, strategy: str, config: dict) -> Tuple[float, dict]:
-        key = self._key(strategy, config)
-        if key in self._cache:
-            return self._cache[key]
         opts = opts_from_config(config)
         plan = build_plan(self.cfg, self.shape, self.mesh,
                           strategy=strategy, opts=opts)
@@ -73,12 +80,38 @@ class CompileCostObjective:
         result["objective"] = t
         result["strategy"] = strategy
         result["config"] = dict(config)
-        self._cache[key] = (t, result)
         if self.verbose:
+            # diagnostics go to stderr: stdout belongs to --out/JSON
+            # piping (the benchmarks/run.py convention)
             print(f"  eval [{strategy}] {config} -> t={t:.3f}s "
                   f"(bottleneck={report.bottleneck}, "
-                  f"mem={peak/1e9:.1f}GB)", flush=True)
+                  f"mem={peak/1e9:.1f}GB)", file=sys.stderr, flush=True)
         return t, result
 
     def __call__(self, strategy: str, config: dict) -> float:
         return self.evaluate(strategy, config)[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _objective_for(arch: str, shape: str, mesh: str) -> CompileCostObjective:
+    """One CompileCostObjective per (arch, shape, mesh) parameterization,
+    built lazily worker-side.  This caches the *objective instance*
+    (mesh construction, config lookup), never evaluation results — the
+    engine store is the result memoizer."""
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    return CompileCostObjective(
+        get_config(arch), get_shape(shape),
+        make_production_mesh(multi_pod=(mesh == "multipod")))
+
+
+def eval_compile_cost(params: Dict[str, Any],
+                      context: Dict[str, Any]) -> dict:
+    """Evaluate one (provider, config) candidate for the ``compile_cost``
+    objective registry entry: lower + compile under the candidate
+    sharding, score by roofline step time.  The full report rides along
+    in the payload so the autotuner's ``best_report`` is a store hit."""
+    obj = _objective_for(params["arch"], params["shape"],
+                         params.get("mesh", "pod"))
+    t, report = obj.evaluate(params["provider"], dict(params["config"]))
+    return {"value": float(t), "report": report}

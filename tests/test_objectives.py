@@ -1,0 +1,415 @@
+"""Objective registry + autotune through the driver/engine stack.
+
+The contract under test: objectives are as pluggable as search methods —
+the registry validates parameterizations, ``offline`` bindings mint the
+exact pre-registry eval-unit content keys (old stores replay with
+``computed=0``), and ``autotune_search`` over the engine produces
+histories bit-identical to the retained inline reference loop
+(``autotune_reference``), cold and warm.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import objectives as obj_mod
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.objectives import (
+    bind_objective, dryrun_command, get_objective, objective_names,
+    objective_specs, register_objective)
+from repro.exp import make_objective_engine
+from repro.exp.runners import drive_units, eval_unit
+from repro.multicloud import build_dataset
+from repro.tuner.autotune import (
+    autotune_reference, autotune_search, driver_best, make_tuner_driver)
+
+BUDGET = 11
+SEED = 3
+
+
+# ---------------------------------------------------------------------------
+# synthetic objective: deterministic, cheap, registered like an extension
+# ---------------------------------------------------------------------------
+def synth_domain() -> Domain:
+    knob = ParamSpace("knob", (1, 2, 3))
+    return Domain(providers=(
+        ProviderSpace("a", (knob,)), ProviderSpace("b", (knob,)),
+        ProviderSpace("c", (knob,))))
+
+
+def eval_synth(params, context):
+    key = json.dumps([params["provider"],
+                      sorted(dict(params["config"]).items()),
+                      params.get("level", 1)])
+    h = hashlib.sha256(key.encode()).hexdigest()
+    return {"value": int(h[:8], 16) / 16 ** 8}
+
+
+def synth_inline(provider: str, config: dict, level: int = 1) -> float:
+    return eval_synth({"provider": provider,
+                       "config": tuple(sorted(config.items())),
+                       "level": level}, {})["value"]
+
+
+def _eval_no_value(params, context):
+    return {"loss": 1.0}
+
+
+SYNTH = register_objective(
+    "synthetic", eval_synth,
+    domain_factory=lambda params: synth_domain(),
+    params=("level",), defaults={"level": 1}, tags=("test",))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+def test_builtins_registered_in_order():
+    names = objective_names()
+    assert "synthetic" in names
+    builtins = [n for n in names
+                if n in ("offline", "compile_cost", "dryrun")]
+    assert builtins == ["offline", "compile_cost", "dryrun"]
+    assert {s.name for s in objective_specs()} >= set(builtins)
+
+
+def test_tag_filter():
+    assert objective_names(tag="table") == ("offline",)
+    assert objective_names(tag="measured") == ("compile_cost", "dryrun")
+    assert "synthetic" in objective_names(tag="test")
+
+
+def test_unknown_objective():
+    with pytest.raises(KeyError, match="unknown objective"):
+        get_objective("carbon")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_objective("offline", eval_synth,
+                           domain_factory=lambda p: synth_domain())
+
+
+def test_evaluate_must_be_importable_by_name():
+    with pytest.raises(TypeError, match="module-level callable"):
+        register_objective("bad", lambda params, ctx: {"value": 0.0},
+                           domain_factory=lambda p: synth_domain())
+    with pytest.raises(TypeError, match="module:qualname"):
+        register_objective("bad", 42,
+                           domain_factory=lambda p: synth_domain())
+
+
+def test_context_params_must_be_params():
+    with pytest.raises(ValueError, match="context_params"):
+        register_objective("bad", eval_synth,
+                           domain_factory=lambda p: synth_domain(),
+                           params=("x",), context_params=("y",))
+
+
+def test_param_validation():
+    spec = get_objective("offline")
+    with pytest.raises(ValueError, match="unknown param"):
+        spec.bind(workload="w", target="cost", fidelity=2)
+    with pytest.raises(ValueError, match="missing required param"):
+        spec.bind(workload="w")
+    with pytest.raises(ValueError, match="JSON scalar"):
+        spec.bind(workload=("w",), target="cost")
+    # defaults apply and params canonicalize to sorted order
+    b = spec.bind(target="cost", workload="w")
+    assert dict(b.params)["dataset_seed"] == 0
+    assert [k for k, _v in b.params] == sorted(k for k, _v in b.params)
+
+
+def test_run_requires_value_field():
+    spec = register_objective(
+        "no_value", _eval_no_value,
+        domain_factory=lambda p: synth_domain())
+    with pytest.raises(TypeError, match="'value' field"):
+        spec.run({"provider": "a", "config": ()}, {})
+
+
+def test_external_registration_before_builtin_access():
+    """An extension registering its own objective before anything reads
+    the registry must not hide the builtins (the builtin load is gated
+    on a flag, not on registry non-emptiness).  Needs a fresh
+    interpreter: here the builtins are long since loaded."""
+    code = (
+        "from repro.core import objectives\n"
+        "objectives.register_objective('mine',"
+        " 'tests.test_objectives:eval_synth',"
+        " domain_factory=lambda p: None, tags=('test',))\n"
+        "names = objectives.objective_names()\n"
+        "assert 'mine' in names and 'offline' in names, names\n"
+        "assert 'compile_cost' in names and 'dryrun' in names, names\n"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=os.path.join(
+            os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, r.stderr
+
+
+# ---------------------------------------------------------------------------
+# offline binding: the pre-registry content key, bit for bit
+# ---------------------------------------------------------------------------
+def test_offline_unit_is_legacy_eval_unit():
+    b = bind_objective("offline", workload="kmeans@buzz", target="cost")
+    cfg = {"nodes": 2, "family": "m4"}
+    assert b.unit("aws", cfg) == eval_unit("kmeans@buzz", "cost", "aws", cfg)
+    # no objective field sneaks into the params
+    assert "objective" not in dict(b.unit("aws", cfg).params)
+    assert b.context() == {"dataset_seed": 0}
+
+
+def test_non_offline_unit_carries_objective_field():
+    b = bind_objective("synthetic")
+    params = dict(b.unit("a", {"knob": 2}).params)
+    assert params["objective"] == "synthetic"
+    assert params["level"] == 1
+
+
+def test_pre_registry_store_replays_offline_with_computed_zero(ds, tmp_path):
+    """A store written through the legacy eval_unit path (pre-registry
+    content keys) must replay an autotune_search over the offline
+    binding without computing anything."""
+    w, target = ds.workloads[0], "cost"
+    store_path = str(tmp_path / "legacy.jsonl")
+    legacy = make_objective_engine(context={"dataset_seed": ds.seed},
+                                  store_path=store_path)
+    units = [eval_unit(w, target, prov, cfg)
+             for prov, cfg in ds.domain.all_candidates()]
+    legacy.run(units)
+    assert legacy.lifetime.computed == len(units)
+
+    warm = make_objective_engine(context={"dataset_seed": ds.seed},
+                                 store_path=store_path)
+    b = bind_objective("offline", workload=w, target=target,
+                       dataset_seed=int(ds.seed))
+    res = autotune_search(b, budget=BUDGET, driver="cb_rbfopt", seed=SEED,
+                          engine=warm)
+    assert warm.lifetime.computed == 0
+    assert warm.lifetime.cached > 0
+    assert res["n_evals"] == BUDGET
+
+
+def test_binding_context_mismatch_rejected(ds):
+    engine = make_objective_engine(context={"dataset_seed": 7})
+    b = bind_objective("offline", workload=ds.workloads[0], target="cost",
+                       dataset_seed=3)
+    drv = make_tuner_driver("random", ds.domain, 3, 0)
+    with pytest.raises(ValueError, match="dataset_seed"):
+        drive_units(engine, [(drv, b)])
+
+
+# ---------------------------------------------------------------------------
+# autotune over the engine == retained inline reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("driver", ("cb_rbfopt", "cb_cherrypick", "smac",
+                                    "random"))
+def test_autotune_bit_identical_to_reference(driver, tmp_path):
+    dom = synth_domain()
+    prov, cfg, val, hist = autotune_reference(
+        dom, synth_inline, budget=BUDGET, driver=driver, seed=SEED)
+    reference = [(p[0], p[1], v) for p, v in zip(hist.points, hist.values)]
+
+    store_path = str(tmp_path / "units.jsonl")
+    cold = make_objective_engine(store_path=store_path, executor="thread",
+                                 workers=2)
+    res = autotune_search(bind_objective("synthetic"), budget=BUDGET,
+                          driver=driver, seed=SEED, engine=cold)
+    assert [(h["provider"], h["config"], h["value"])
+            for h in res["history"]] == reference
+    assert (res["best_provider"], res["best_config"],
+            res["best_value"]) == (prov, cfg, val)
+    assert cold.lifetime.computed > 0
+
+    warm = make_objective_engine(store_path=store_path)
+    res2 = autotune_search(bind_objective("synthetic"), budget=BUDGET,
+                           driver=driver, seed=SEED, engine=warm)
+    assert res2["history"] == res["history"]
+    assert warm.lifetime.computed == 0
+    assert warm.lifetime.cached > 0
+
+
+def test_autotune_offline_matches_reference(ds):
+    w, target = ds.workloads[0], "cost"
+    task = ds.task(w, target)
+    prov, cfg, val, hist = autotune_reference(
+        ds.domain, task.objective, budget=BUDGET, driver="cb_rbfopt",
+        seed=SEED)
+    res = autotune_search(
+        bind_objective("offline", workload=w, target=target,
+                       dataset_seed=int(ds.seed)),
+        budget=BUDGET, driver="cb_rbfopt", seed=SEED)
+    assert [(h["provider"], tuple(sorted(h["config"].items())), h["value"])
+            for h in res["history"]] \
+        == [(p[0], tuple(sorted(p[1].items())), v)
+            for p, v in zip(hist.points, hist.values)]
+    assert res["best_provider"] == prov and res["best_value"] == val
+
+
+def test_below_minimum_budget_clamps_like_legacy():
+    """The registry's cb factories raise below the K-arm minimum; the
+    tuner clamps to the b1=1 schedule exactly as the legacy autotuner
+    did."""
+    dom = synth_domain()
+    small = 5          # < total_budget(K=3, b1=1) == 11
+    _p, _c, _v, hist = autotune_reference(
+        dom, synth_inline, budget=small, driver="cb_rbfopt", seed=SEED)
+    drv = make_tuner_driver("cb_rbfopt", dom, small, SEED)
+    from repro.core.drivers import drive
+    hist2 = drive(drv, synth_inline)
+    assert hist2.points == hist.points and hist2.values == hist.values
+    # non-coupled methods still surface their own errors
+    with pytest.raises(KeyError, match="unknown search method"):
+        make_tuner_driver("levenberg", dom, small, SEED)
+
+
+def test_driver_best_covers_every_driver_shape(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    for method in ("cb_rbfopt", "rb", "smac", "cherrypick_x3"):
+        from repro.core.drivers import drive
+        from repro.core.registry import get_method
+        drv = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                             target="cost")
+        hist = drive(drv, task.objective)
+        prov, cfg, val = driver_best(drv)
+        assert prov in ds.domain.provider_names
+        assert val <= max(hist.values)
+
+
+# ---------------------------------------------------------------------------
+# compile-cost / dryrun plumbing (no compiles paid here)
+# ---------------------------------------------------------------------------
+def test_compile_cost_binding_unit_key():
+    b = bind_objective("compile_cost", arch="qwen1.5-4b", shape="train_4k")
+    params = dict(b.unit("fsdp_tp", {"remat": "dots"}).params)
+    assert params["objective"] == "compile_cost"
+    assert params["arch"] == "qwen1.5-4b" and params["mesh"] == "pod"
+    assert b.context() == {}
+
+
+def test_compile_cost_domain_adapts():
+    b = bind_objective("compile_cost", arch="qwen1.5-4b", shape="train_4k")
+    dom = b.make_domain()
+    assert "fsdp_tp" in dom.provider_names
+    assert len(dom.provider_names) == 4          # train: 4 arms
+
+
+def test_dryrun_command_mapping(tmp_path):
+    out = str(tmp_path / "cell.json")
+    params = {"arch": "qwen1.5-4b", "shape": "train_4k",
+              "mesh": "multipod", "provider": "ddp_tp",
+              "config": (("attn_chunk", 256), ("banded_local", False),
+                         ("remat", "dots"))}
+    cmd = dryrun_command(params, out)
+    assert cmd[:3] == [sys.executable, "-m", "repro.launch.dryrun"]
+    assert "--multi-pod" in cmd
+    assert cmd[cmd.index("--strategy") + 1] == "ddp_tp"
+    assert cmd[cmd.index("--attn-chunk") + 1] == "256"
+    assert cmd[cmd.index("--remat") + 1] == "dots"
+    assert "--banded-local" not in cmd           # False => flag omitted
+    assert "--ce-chunk" not in cmd               # unset => CLI default
+
+    params["config"] = (("banded_local", True), ("warp_size", 32))
+    with pytest.raises(ValueError, match="unknown config knob"):
+        dryrun_command(params, out)
+
+
+def test_opts_from_config_rejects_unknown_keys():
+    from repro.tuner.objective import opts_from_config
+    opts = opts_from_config({"remat": "dots", "attn_chunk": 256})
+    assert opts.remat == "dots" and opts.attn_chunk == 256
+    with pytest.raises(ValueError, match="unknown config key"):
+        opts_from_config({"remat": "dots", "atn_chunk": 256})
+
+
+def test_dryrun_cli_sentinel_keeps_per_arch_default():
+    """--attn-chunk 0 with another opts-triggering flag must resolve to
+    the per-arch default (256 for vlm), never a silent flat 512 — and
+    importing the dryrun module must not contaminate XLA_FLAGS."""
+    before = os.environ.get("XLA_FLAGS")
+    from repro.launch.dryrun import opts_from_cli
+    assert os.environ.get("XLA_FLAGS") == before
+    import argparse
+    args = argparse.Namespace(arch="llama-3.2-vision-90b", attn_chunk=0,
+                              ce_chunk=1024, remat="full",
+                              banded_local=True)
+    opts = opts_from_cli(args)
+    assert opts.banded_local is True
+    assert opts.attn_chunk == 256               # vlm per-arch default
+    args.arch = "qwen1.5-4b"
+    assert opts_from_cli(args).attn_chunk == 512
+    args.attn_chunk = 384
+    assert opts_from_cli(args).attn_chunk == 384
+    # all defaults => no opts object at all (build_plan defaulting wins)
+    args = argparse.Namespace(arch="qwen1.5-4b", attn_chunk=0,
+                              ce_chunk=1024, remat="full",
+                              banded_local=False)
+    assert opts_from_cli(args) is None
+
+
+# ---------------------------------------------------------------------------
+# CLIs
+# ---------------------------------------------------------------------------
+def _repo_env():
+    return {**os.environ, "PYTHONPATH": "src"}
+
+
+def _repo_root():
+    return os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_exp_objectives_subcommand():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.exp", "objectives"],
+        capture_output=True, text=True, env=_repo_env(), cwd=_repo_root())
+    assert r.returncode == 0, r.stderr
+    for name in ("offline", "compile_cost", "dryrun"):
+        assert name in r.stdout
+    assert "repro.core.objectives:eval_offline" in r.stdout
+
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.exp", "objectives", "--tag", "table"],
+        capture_output=True, text=True, env=_repo_env(), cwd=_repo_root())
+    assert r.returncode == 0
+    assert "offline" in r.stdout and "dryrun" not in r.stdout
+
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.exp", "objectives", "--tag", "nope"],
+        capture_output=True, text=True, env=_repo_env(), cwd=_repo_root())
+    assert r.returncode == 1
+
+
+@pytest.mark.slow
+def test_autotune_cli_offline_cold_then_warm(tmp_path):
+    """The CI smoke leg's contract, end to end: the autotune CLI over
+    the offline objective computes on a cold store and replays with
+    computed=0 on a warm one, with bit-identical results."""
+    store = str(tmp_path / "autotune.jsonl")
+    out1, out2 = str(tmp_path / "r1.json"), str(tmp_path / "r2.json")
+    cmd = [sys.executable, "-m", "repro.tuner.autotune",
+           "--objective", "offline", "--workload", "kmeans@buzz",
+           "--target", "cost", "--budget", "11", "--driver", "cb_rbfopt",
+           "--seed", "3", "--executor", "thread", "--workers", "2",
+           "--store", store]
+    r1 = subprocess.run(cmd + ["--out", out1], capture_output=True,
+                        text=True, env=_repo_env(), cwd=_repo_root())
+    assert r1.returncode == 0, r1.stderr
+    assert "[exp] autotune:" in r1.stderr
+    r2 = subprocess.run(cmd + ["--out", out2], capture_output=True,
+                        text=True, env=_repo_env(), cwd=_repo_root())
+    assert r2.returncode == 0, r2.stderr
+    import re
+    m = re.search(r"\[exp\] autotune: .* computed=(\d+)", r2.stderr)
+    assert m and m.group(1) == "0", r2.stderr
+    with open(out1) as f1, open(out2) as f2:
+        assert json.load(f1) == json.load(f2)

@@ -65,7 +65,8 @@ def report_engine(name: str, engine) -> None:
     lt = engine.lifetime
     print(f"[exp] {name}: units={lt.total} unique={lt.unique} "
           f"cached={lt.cached} computed={lt.computed} failed={lt.failed} "
-          f"retried={lt.retried}", file=sys.stderr, flush=True)
+          f"failures={len(lt.failures)} retried={lt.retried}",
+          file=sys.stderr, flush=True)
     for failure in lt.failures:
         print(f"[exp] {name}: FAILED unit {failure}", file=sys.stderr,
               flush=True)

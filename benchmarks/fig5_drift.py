@@ -1,0 +1,196 @@
+"""Fig. 5 — regret under a hostile cloud: dynamic markets + failures.
+
+The new scenario family alongside figs 2-4: the same driver/engine
+stack runs against the ``market`` objective (:mod:`repro.multicloud.
+market`) — the offline table through seeded price walks, price steps,
+provider outages and instance revocations — with the market advancing
+one tick per ask round via the :func:`repro.exp.runners.drive_units`
+clock hook.  Static bandits (``cb_rbfopt``, ``rb``) are compared
+against their drift-aware variants (``cb_drift``, ``rb_drift``) on
+*dynamic regret*: at every tick the method's current play is scored
+against that tick's instantaneous optimum over the available grid,
+relative to that optimum, and averaged over the horizon.  During the
+search a tick's play is the round's best successful evaluation (the
+worst available point when every pull failed — flying blind has a
+price); after the search the frozen incumbent keeps being charged at
+current market prices, the worst available point whenever it is down
+or revoked.
+
+Outputs the standard ``name,us_per_call,derived`` rows (us_per_call
+left empty: every value here must be bit-identical across executors)
+plus ``BENCH_drift.json`` at the repo root with the full scenario
+breakdown.  Structured evaluation failures are *expected* — the
+machine-checkable stderr line reports them as ``eval_failures=N``; the
+engine-level ``failed=`` counter must stay 0.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import (
+    ROOT, check_methods_registered, emit, figure_engine, report_engine,
+    write_rows)
+from repro.core.objectives import EvalFailure, bind_objective
+from repro.core.registry import get_method
+from repro.exp.runners import drive_units
+from repro.multicloud import build_dataset
+from repro.multicloud.market import MarketClock, TickedBinding, get_overlay
+from repro.tuner.autotune import driver_best
+
+NAME = "fig5_drift"
+#: static methods next to their drift-aware variants — the comparison
+#: the figure is about
+METHODS = ("cb_rbfopt", "cb_drift", "rb", "rb_drift")
+TARGET = "cost"
+BUDGET = 33
+HORIZON = 48
+MARKET_SEED = 0
+BENCH_PATH = os.path.join(ROOT, "BENCH_drift.json")
+
+#: scenario -> market overlay parameters.  aws wins 20/30 cost
+#: workloads and gcp most of the rest, so the drift scenarios move
+#: exactly those providers mid-search — after the static bandits'
+#: elimination rounds have already committed.
+SCENARIOS = (
+    ("price_drift", {
+        "walk_sigma": 0.04,
+        "schedule": "step:aws:3.5:8,step:gcp:2.5:16"}),
+    ("outage", {
+        "walk_sigma": 0.0,
+        "schedule": "outage:aws:5:12,outage:gcp:14:20,"
+                    "revoke:azure:family=D_v3:3:30"}),
+    ("storm", {
+        "walk_sigma": 0.05,
+        "schedule": "step:aws:3.0:7,outage:aws:12:18,"
+                    "outage:azure:20:26,revoke:gcp:family=e2:9:40,"
+                    "step:gcp:2.0:19"}),
+)
+
+
+def _canon(config: dict) -> tuple:
+    return tuple(sorted(config.items()))
+
+
+def dynamic_regret(overlay, base_table, trace, incumbent,
+                   horizon: int, target: str) -> float:
+    """Mean relative dynamic regret of one run over the horizon (see
+    module docstring for the per-tick play definition)."""
+    by_tick = {}
+    for tick, batch_vals in trace:
+        by_tick.setdefault(tick, []).extend(batch_vals)
+    last_search_tick = max(by_tick) if by_tick else -1
+    prov, cfg, _ = incumbent
+    inc_key = (prov, _canon(cfg))
+    regrets = []
+    for t in range(horizon):
+        fstar = overlay.instant_optimum(t, base_table, target)
+        if fstar is None:               # market fully dark: nobody plays
+            continue
+        if t <= last_search_tick:
+            succ = [v for _p, v in by_tick.get(t, ())
+                    if not isinstance(v, EvalFailure)]
+            v = min(succ) if succ else \
+                overlay.instant_worst(t, base_table, target)
+        elif overlay.available(t, prov, cfg):
+            v = overlay.value(t, base_table[inc_key], prov, target)
+        else:                           # incumbent down post-search
+            v = overlay.instant_worst(t, base_table, target)
+        regrets.append((v - fstar) / fstar)
+    return float(np.mean(regrets)) if regrets else 0.0
+
+
+def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
+        executor: str = None, store_dir: str = None, hosts: str = None,
+        timeout: float = None, retries: int = 0):
+    check_methods_registered(METHODS)
+    ds = build_dataset()
+    engine = figure_engine(ds, workers=workers, store=store,
+                           executor=executor, store_dir=store_dir,
+                           hosts=hosts, timeout=timeout, retries=retries)
+    workloads = ds.workloads[::10] if quick else ds.workloads
+    seeds = list(seeds)[:1] if quick else list(seeds)
+    per_cell = {}                   # (scenario, method) -> [regret, ...]
+    drift_by = {}                   # (scenario, method) -> fired count
+    eval_failures = 0
+    drift_events = 0
+    with engine:
+        for scen, market in SCENARIOS:
+            overlay = get_overlay(MARKET_SEED, HORIZON,
+                                  market["walk_sigma"], market["schedule"])
+            for w in workloads:
+                base_table = ds.task(w, TARGET).table
+                for seed in seeds:
+                    # the methods of one (scenario, workload, seed) cell
+                    # share one clock: every method experiences the same
+                    # market trajectory, tick = ask round
+                    clock = MarketClock()
+                    binding = bind_objective(
+                        "market", workload=w, target=TARGET,
+                        dataset_seed=int(ds.seed),
+                        market_seed=MARKET_SEED, horizon=HORIZON, **market)
+                    ticked = TickedBinding(binding, clock)
+                    drivers = [
+                        get_method(m).make_driver(ds.domain, BUDGET, seed,
+                                                  target=TARGET)
+                        for m in METHODS]
+                    traces = {i: [] for i in range(len(METHODS))}
+
+                    def obs(i, tick, batch, values, _tr=traces):
+                        _tr[i].append((tick, list(zip(
+                            (p for p, _c in batch), values))))
+
+                    drive_units(engine, [(d, ticked) for d in drivers],
+                                clock=clock, on_failure="tell",
+                                observer=obs)
+                    for i, m in enumerate(METHODS):
+                        drv = drivers[i]
+                        eval_failures += len(getattr(drv, "failures", ()))
+                        fired = len(getattr(drv, "drift_events", ()))
+                        drift_events += fired
+                        drift_by[(scen, m)] = \
+                            drift_by.get((scen, m), 0) + fired
+                        r = dynamic_regret(overlay, base_table, traces[i],
+                                           driver_best(drv), HORIZON,
+                                           TARGET)
+                        per_cell.setdefault((scen, m), []).append(r)
+    out = []
+    bench = {"target": TARGET, "budget": BUDGET, "horizon": HORIZON,
+             "market_seed": MARKET_SEED, "quick": bool(quick),
+             "workloads": list(workloads), "seeds": [int(s) for s in seeds],
+             "scenarios": {}, "eval_failures": int(eval_failures),
+             "drift_events": int(drift_events)}
+    for scen, market in SCENARIOS:
+        bench["scenarios"][scen] = {
+            "market": market,
+            "drift_events": {m: drift_by.get((scen, m), 0)
+                             for m in METHODS},
+            "mean_regret": {m: round(float(np.mean(per_cell[(scen, m)])), 4)
+                            for m in METHODS}}
+        for m in METHODS:
+            # us_per_call deliberately empty: wall-clock derived columns
+            # would break the serial-vs-thread bit-identity gate
+            out.append([f"fig5.{scen}.{m}", "",
+                        round(float(np.mean(per_cell[(scen, m)])), 4)])
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    report_engine(NAME, engine)
+    print(f"[exp] {NAME}: eval_failures={eval_failures} "
+          f"drift_events={drift_events}", file=sys.stderr, flush=True)
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False, workers: int = 1, executor: str = None,
+         store_dir: str = None, hosts: str = None, timeout: float = None,
+         retries: int = 0) -> None:
+    emit(run(quick=quick, workers=workers, executor=executor,
+             store_dir=store_dir, hosts=hosts, timeout=timeout,
+             retries=retries))
+
+
+if __name__ == "__main__":
+    main()

@@ -30,15 +30,28 @@ in the exact order of the retained reference loops
 ``history`` reproduces the reference ``History`` — points and values —
 bit for bit.  The bit-identity suite (``tests/test_drivers.py``)
 enforces this for every registered method.
+
+Failure semantics: a tell may be an :class:`~repro.core.objectives.
+EvalFailure` instead of a float (provider outage, instance revocation —
+see :mod:`repro.multicloud.market`).  Every driver defines graceful
+degradation: flat and per-provider-stream methods penalize the failed
+point and continue; the bandit drivers pause the dead arm, probe it
+each round, and resurrect it with fresh exploration on recovery.  A
+failure never enters a ``history`` or a surrogate, and non-finite float
+tells (NaN/inf) are rejected loudly — the structured path is the *only*
+way to report a failed evaluation.  On an all-success run the failure
+machinery is inert and the bit-identity contract above is unchanged.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cloudbandit import CloudBanditResult, b1_for_budget
 from repro.core.domain import Domain
+from repro.core.objectives import EvalFailure
 from repro.core.optimizers import (
     BO, RBFOpt, RandomSearch, SMACLike, TPE, bilal, cherrypick,
     CoordinateDescent, ExhaustiveSearch)
@@ -101,6 +114,28 @@ class SearchDriver:
         self._pending = None
         return pending
 
+    def _tell_value(self, raw):
+        """Validate one told value: an :class:`EvalFailure` passes
+        through (the structured failure path), anything else must be a
+        finite float — a NaN/inf sentinel would silently poison the
+        surrogates, so it is rejected loudly instead."""
+        if isinstance(raw, EvalFailure):
+            return raw
+        v = float(raw)
+        if not math.isfinite(v):
+            raise ValueError(
+                f"non-finite tell {v!r}: report failed evaluations as "
+                f"EvalFailure, never as NaN/inf")
+        return v
+
+    @staticmethod
+    def _penalty(observed: Sequence[float]) -> float:
+        """Continue-after-failure value for methods without an arm to
+        pause: decisively worse than anything observed (objectives are
+        positive runtimes/costs), but finite — surrogates stay sane."""
+        finite = [v for v in observed if math.isfinite(v)]
+        return 10.0 * max(finite) if finite else 1e6
+
 
 def drive(driver: SearchDriver,
           objective: Callable[[str, dict], float]) -> History:
@@ -123,6 +158,7 @@ class FlatDriver(SearchDriver):
     def __init__(self, opt: BlackBoxOptimizer, budget: int):
         self.opt = opt
         self.budget = int(budget)
+        self.failures: List[dict] = []
         self._pending: Optional[list] = None
 
     @property
@@ -141,7 +177,16 @@ class FlatDriver(SearchDriver):
 
     def tell_batch(self, values: Sequence[float]) -> None:
         (idx,) = self._take_pending(values)
-        self.opt.tell(idx, float(values[0]))
+        v = self._tell_value(values[0])
+        if isinstance(v, EvalFailure):
+            # penalize-and-continue: no arm to pause, so the failed
+            # point enters the history at a finite worst-case value
+            penalty = self._penalty(self.opt.history.values)
+            self.failures.append({
+                "point": self.opt.candidates[idx], "reason": v.reason,
+                "eval": len(self.opt.history), "penalty": penalty})
+            v = penalty
+        self.opt.tell(idx, v)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +218,7 @@ class IndependentDriver(SearchDriver):
                 enc = domain.inner_encoder(prov).encode
             opt = factory(cands, enc, seed=int(rng.integers(2 ** 31)))
             self._streams.append([prov, opt, b, History()])
+        self.failures: List[dict] = []
         self._pending: Optional[list] = None
 
     @property
@@ -202,8 +248,17 @@ class IndependentDriver(SearchDriver):
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)
-        for (stream, idx), val in zip(pending, values):
+        for (stream, idx), raw in zip(pending, values):
             prov, opt, _b, sh = stream
+            val = self._tell_value(raw)
+            if isinstance(val, EvalFailure):
+                # the stream still spends its budget: a dead provider
+                # must not trap the driver in an endless retry loop
+                penalty = self._penalty(opt.history.values)
+                self.failures.append({
+                    "provider": prov, "config": opt.candidates[idx],
+                    "reason": val.reason, "penalty": penalty})
+                val = penalty
             opt.tell(idx, val)
             sh.append((prov, opt.candidates[idx]), val)
             stream[2] -= 1
@@ -218,7 +273,15 @@ class CloudBanditDriver(SearchDriver):
     independent — so pull ``j`` of the round yields one request per
     active arm.  The round's history is flushed in arm order (matching
     the reference loop, which ran arms one after another), then the
-    worst arm is eliminated and the per-arm budget doubles."""
+    worst arm is eliminated and the per-arm budget doubles.
+
+    Failure semantics: an arm whose pull fails (provider outage) is
+    *paused* — removed from the active set without counting as
+    eliminated — and probed once per subsequent ask round; the first
+    successful probe resurrects it into the active set, protected from
+    elimination for the round it rejoins.  With no failures none of
+    this machinery runs and histories stay bit-identical to the
+    reference loop."""
 
     def __init__(self, domain: Domain, bbo_factory: Callable[..., Any], *,
                  b1: int = 1, eta: float = 2.0, seed: int = 0):
@@ -236,6 +299,10 @@ class CloudBanditDriver(SearchDriver):
         self.eliminated: List[Tuple[str, int]] = []
         self.pulls = {k: 0 for k in self.arms}
         self.best: Dict[str, Tuple[Any, float]] = {}
+        self.paused: Dict[str, int] = {}    # arm -> round it went dark
+        self.failures: List[dict] = []
+        self.resurrections: List[Tuple[str, int]] = []
+        self._protected: set = set()        # resurrected this round
         self._m = 1                         # current round (1..K)
         self._b_m = int(b1)
         self._j = 0                         # pulls completed this round
@@ -257,16 +324,37 @@ class CloudBanditDriver(SearchDriver):
         for k in self.active:
             o = self.opts[k]
             idx = o.ask()
-            self._pending.append((k, idx))
+            self._pending.append((k, idx, False))
+            out.append((k, o.candidates[idx]))
+        # one recovery probe per paused arm per batch, after the active
+        # pulls; arm order keeps the request sequence deterministic
+        for k in (a for a in self.arms if a in self.paused):
+            o = self.opts[k]
+            idx = o.ask()
+            self._pending.append((k, idx, True))
             out.append((k, o.candidates[idx]))
         return out
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)
-        for (k, idx), v in zip(pending, values):
-            val = float(v)
+        for (k, idx, probe), raw in zip(pending, values):
+            val = self._tell_value(raw)
             o = self.opts[k]
             cfg = o.candidates[idx]
+            if isinstance(val, EvalFailure):
+                self.failures.append({
+                    "arm": k, "config": cfg, "reason": val.reason,
+                    "round": self._m, "probe": probe})
+                if not probe and k in self.active:
+                    self.active.remove(k)
+                    self.paused[k] = self._m
+                continue
+            if probe:       # recovered: rejoin, shielded this round
+                self.paused.pop(k, None)
+                self.active.append(k)
+                self.active.sort(key=self.arms.index)
+                self._protected.add(k)
+                self.resurrections.append((k, self._m))
             o.tell(idx, val)
             self._round_buf.setdefault(k, []).append(((k, cfg), val))
             self.pulls[k] += 1
@@ -274,25 +362,47 @@ class CloudBanditDriver(SearchDriver):
         if self._j >= self._b_m:
             self._finish_round()
 
+    def _arm_best(self, k: str) -> Tuple[Any, float]:
+        """Incumbent of one arm; drift-aware subclasses narrow this to a
+        post-drift window."""
+        return self.opts[k].best()
+
     def _finish_round(self) -> None:
         # flush the round's evaluations arm-by-arm: the reference loop
-        # ran arm k's b_m pulls to completion before touching arm k+1
-        for k in self.active:
+        # ran arm k's b_m pulls to completion before touching arm k+1.
+        # Iterating self.arms (not self.active) keeps a just-paused
+        # arm's partial round in the history; on an all-success run the
+        # two orders coincide.
+        for k in self.arms:
+            if k not in self._round_buf and k not in self.active:
+                continue
             for point, val in self._round_buf.get(k, ()):
                 self._history.append(point, val)
-            self.best[k] = self.opts[k].best()
+            if len(self.opts[k].history):
+                self.best[k] = self._arm_best(k)
         self._round_buf = {}
-        if len(self.active) > 1:
-            worst = max(self.active, key=lambda k: self.best[k][1])
+        # resurrected arms keep elimination immunity for the round they
+        # rejoined; a round where every peer is protected skips
+        # elimination rather than killing the sole survivor
+        cands = [k for k in self.active
+                 if k in self.best and k not in self._protected]
+        if len(cands) > 1:
+            worst = max(cands, key=lambda k: self.best[k][1])
             self.active.remove(worst)
             self.eliminated.append((worst, self._m))
+        self._protected = set()
         self._b_m = int(round(self.eta * self._b_m))
         self._m += 1
         self._j = 0
 
     def result(self) -> CloudBanditResult:
         self._check_done()
-        k_star = min(self.active, key=lambda k: self.best[k][1])
+        pool = [k for k in self.active if k in self.best] \
+            or [k for k in self.arms if k in self.best]
+        if not pool:
+            raise RuntimeError(
+                "no successful evaluations: every arm failed every pull")
+        k_star = min(pool, key=lambda k: self.best[k][1])
         cfg_star, loss_star = self.best[k_star]
         return CloudBanditResult(
             provider=k_star, config=cfg_star, loss=loss_star,
@@ -306,7 +416,13 @@ class CloudBanditDriver(SearchDriver):
 class RisingBanditsDriver(SearchDriver):
     """Round-robin sweeps over the active arms with extrapolated-bound
     elimination after each sweep; a sweep's pulls are independent across
-    arms, so each sweep is one batch (truncated at the budget)."""
+    arms, so each sweep is one batch (truncated at the budget).
+
+    Failure semantics mirror :class:`CloudBanditDriver`: a failed pull
+    pauses the arm (distinct from elimination), paused arms are probed
+    once per sweep after the active arms, and a successful probe
+    resurrects the arm.  Failed pulls still consume budget — a fully
+    dark market must terminate, not spin."""
 
     def __init__(self, domain: Domain, budget: int, *, seed: int = 0,
                  warmup: int = 3, slope_window: int = 3):
@@ -324,6 +440,9 @@ class RisingBanditsDriver(SearchDriver):
         }
         self.curves: Dict[str, List[float]] = {k: [] for k in self.arms}
         self.active = list(self.arms)
+        self.paused: set = set()
+        self.failures: List[dict] = []
+        self.resurrections: List[Tuple[str, int]] = []
         self._history = History()
         self.used = 0
         self._pending: Optional[list] = None
@@ -339,23 +458,41 @@ class RisingBanditsDriver(SearchDriver):
     def ask_batch(self) -> List[EvalRequest]:
         self._begin_ask()
         # the reference sweep breaks out as soon as the budget is hit,
-        # so a final partial sweep only covers the first few active arms
-        sweep = list(self.active)[:self.budget - self.used]
+        # so a final partial sweep only covers the first few active
+        # arms.  Paused arms are probed after the sweep (arm order),
+        # inside the same budget truncation.
+        order = list(self.active) + [k for k in self.arms
+                                     if k in self.paused]
+        sweep = order[:self.budget - self.used]
         self._pending = []
         out: List[EvalRequest] = []
         for k in sweep:
             o = self.opts[k]
             idx = o.ask()
-            self._pending.append((k, idx))
+            self._pending.append((k, idx, k in self.paused))
             out.append((k, o.candidates[idx]))
         return out
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)
-        for (k, idx), v in zip(pending, values):
-            val = float(v)
+        for (k, idx, probe), raw in zip(pending, values):
+            val = self._tell_value(raw)
             o = self.opts[k]
             cfg = o.candidates[idx]
+            if isinstance(val, EvalFailure):
+                self.failures.append({
+                    "arm": k, "config": cfg, "reason": val.reason,
+                    "eval": self.used, "probe": probe})
+                self.used += 1          # failures still consume budget
+                if not probe and k in self.active:
+                    self.active.remove(k)
+                    self.paused.add(k)
+                continue
+            if probe:
+                self.paused.discard(k)
+                self.active.append(k)
+                self.active.sort(key=self.arms.index)
+                self.resurrections.append((k, self.used))
             o.tell(idx, val)
             self._history.append((k, cfg), val)
             self.used += 1
@@ -475,3 +612,9 @@ def _make_cb_cherrypick(domain, budget, seed, target):
 def _make_cb_rbfopt(domain, budget, seed, target):
     b1 = b1_for_budget(budget, len(domain.provider_names))
     return CloudBanditDriver(domain, RBFOpt, b1=b1, seed=seed)
+
+
+# drift-robust variants (cb_drift / rb_drift) register on import; they
+# live in their own module but are part of the builtin set the registry
+# loads through this one
+from repro.core import drift as _drift      # noqa: E402,F401

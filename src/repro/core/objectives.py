@@ -35,10 +35,12 @@ engine context — the one object ``drive_units`` needs to run any search
 driver against any objective through the engine (store memoization,
 executor fan-out, timeouts, retries).
 
-Three builtins register here: ``offline`` (the paper's lookup table),
+Four builtins register here: ``offline`` (the paper's lookup table),
 ``compile_cost`` (roofline-scored XLA compile of a sharding candidate,
-:mod:`repro.tuner.objective`), and ``dryrun`` (the full lower+compile
-cell via the existing ``python -m repro.launch.dryrun`` subprocess).
+:mod:`repro.tuner.objective`), ``dryrun`` (the full lower+compile cell
+via the existing ``python -m repro.launch.dryrun`` subprocess), and
+``market`` (the offline table under a dynamic market overlay with
+structured failures, :mod:`repro.multicloud.market`).
 """
 from __future__ import annotations
 
@@ -62,6 +64,23 @@ EvaluateFn = Callable[[Dict[str, Any], Dict[str, Any]], dict]
 DEFAULT_OBJECTIVE = "offline"
 
 _JSON_SCALARS = (str, int, float, bool, type(None))
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalFailure:
+    """Structured failure of one objective evaluation — the tell-side
+    face of a worker result with a truthy ``failed`` flag (provider
+    outage, instance revocation, exhausted engine retry budget).
+
+    Deliberately *not* a float and *not* an exception: drivers receive
+    it through ``tell_batch`` and define graceful degradation (penalize,
+    pause the arm, ...) instead of crashing or poisoning surrogates with
+    NaN/inf sentinels.
+    """
+    reason: str = ""
+
+    def __bool__(self) -> bool:         # a failure is never a usable value
+        return False
 
 
 def _fn_ref(fn: Any) -> str:
@@ -129,12 +148,17 @@ class ObjectiveSpec:
 
     def run(self, unit_params: Dict[str, Any],
             context: Dict[str, Any]) -> dict:
-        """Evaluate one unit worker-side; result must carry "value"."""
+        """Evaluate one unit worker-side; result must carry "value", or
+        a truthy "failed" flag — the structured-failure schema
+        (``{"failed": True, "reason": str}``), stored content-keyed like
+        any result and replayed warm like any result."""
         result = self.resolve()(unit_params, context)
-        if not isinstance(result, dict) or "value" not in result:
+        if not isinstance(result, dict) or (
+                "value" not in result and not result.get("failed")):
             raise TypeError(
                 f"objective {self.name!r} evaluate must return a dict "
-                f"with a 'value' field, got {type(result).__name__}")
+                f"with a 'value' field or a truthy 'failed' flag, got "
+                f"{type(result).__name__}")
         return result
 
 
@@ -161,7 +185,8 @@ class ObjectiveBinding:
         return {k: v for k, v in self.params
                 if k in self.spec.context_params}
 
-    def unit(self, provider: str, config: Mapping[str, Any]):
+    def unit(self, provider: str, config: Mapping[str, Any],
+             **extra: Any):
         """Content-keyed eval unit for one (provider, config) request.
 
         The key carries (objective, objective params, provider,
@@ -169,9 +194,20 @@ class ObjectiveBinding:
         requested it, so every search touching the same point shares
         one stored record.  For ``offline`` the ``objective`` field is
         omitted entirely: pre-registry stores replay bit-identically.
+
+        ``extra`` adds identity-bearing per-request fields — e.g. the
+        market clock's ``tick``, which makes the same point at two
+        market states two distinct cached records.
         """
         from repro.exp.engine import WorkUnit
         kw = self.unit_params()
+        collide = sorted(set(extra) & (set(kw) | {"provider", "config",
+                                                  "objective"}))
+        if collide:
+            raise ValueError(
+                f"unit() extra field(s) {collide} collide with "
+                f"{self.describe()} identity params")
+        kw.update(extra)
         if self.spec.name != DEFAULT_OBJECTIVE:
             kw["objective"] = self.spec.name
         return WorkUnit.make("eval", provider=provider,
@@ -380,3 +416,16 @@ def _register_builtins() -> None:
         params=("arch", "shape", "mesh"),
         defaults={"mesh": "pod"},
         tags=("measured", "compile", "subprocess"))
+    # the offline table seen through a moving market: per-request units
+    # additionally carry the clock tick (see MarketOverlay / drive_units'
+    # clock hook), and an outage/revocation returns the structured
+    # failed-result schema instead of a value
+    register_objective(
+        "market", "repro.multicloud.market:eval_market",
+        domain_factory=_offline_domain,
+        params=("workload", "target", "dataset_seed", "market_seed",
+                "horizon", "walk_sigma", "schedule"),
+        defaults={"dataset_seed": 0, "market_seed": 0, "horizon": 64,
+                  "walk_sigma": 0.0, "schedule": ""},
+        context_params=("dataset_seed",),
+        tags=("dynamic", "market"))

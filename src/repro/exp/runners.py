@@ -131,7 +131,9 @@ def _normalize_cells(engine: ExperimentEngine,
 
 
 def drive_units(engine: ExperimentEngine,
-                cells: Sequence[DriveCell]) -> List[Any]:
+                cells: Sequence[DriveCell], *,
+                clock: Any = None, on_failure: str = "raise",
+                observer: Any = None) -> List[Any]:
     """Run suspendable search drivers to completion at evaluation
     granularity.
 
@@ -147,14 +149,39 @@ def drive_units(engine: ExperimentEngine,
     so histories are bit-identical to the inline closed loop regardless
     of executor, worker count, or store warmth.
 
+    ``clock``, if given, is advanced (``clock.advance()``) once after
+    every round — the dynamic-market time axis (:class:`repro.
+    multicloud.market.MarketClock`): one ask round = one market tick,
+    with no search internals involved.
+
+    Failure routing: a worker result carrying a truthy ``failed`` flag
+    (the structured failed-result schema — provider outage, instance
+    revocation) is *always* told to the driver as an
+    :class:`~repro.core.objectives.EvalFailure`; drivers define
+    graceful degradation.  An engine-level failure (``None`` result:
+    exhausted retry budget) raises by default, or with
+    ``on_failure="tell"`` is downgraded to an ``EvalFailure`` tell as
+    well — a sweep against a hostile environment completes either way.
+
+    ``observer``, if given, is called as ``observer(cell_index, tick,
+    batch, values)`` after each cell's round results are assembled and
+    before they are told — the per-round trace hook fig5's dynamic
+    regret is computed from.
+
     Returns one :class:`~repro.core.optimizers.base.History` per cell.
     On return ``engine.stats`` holds the totals accumulated over all
     rounds of this call (``engine.lifetime`` accumulates as usual).
     """
+    if on_failure not in ("raise", "tell"):
+        raise ValueError(
+            f"on_failure must be 'raise' or 'tell', got {on_failure!r}")
+    # lazy: keeps `import repro.exp` light for workers/CLI processes
+    from repro.core.objectives import EvalFailure
     pairs = _normalize_cells(engine, cells)
     agg = EngineStats()
     pending: Dict[int, list] = {}
     active = [i for i, (drv, _b) in enumerate(pairs) if not drv.done]
+    round_idx = 0
     while active:
         units: List[WorkUnit] = []
         for i in active:
@@ -174,15 +201,29 @@ def drive_units(engine: ExperimentEngine,
                 res = results[pos]
                 pos += 1
                 if res is None:
-                    raise RuntimeError(
-                        f"eval unit failed for {binding.describe()}"
-                        f"/{prov}: "
-                        + "; ".join(engine.stats.errors[:3]))
-                values.append(res["value"])
+                    if on_failure == "raise":
+                        raise RuntimeError(
+                            f"eval unit failed for {binding.describe()}"
+                            f"/{prov}: "
+                            + "; ".join(engine.stats.errors[:3]))
+                    values.append(EvalFailure(
+                        reason=engine.stats.errors[-1]
+                        if engine.stats.errors else "engine failure"))
+                elif res.get("failed"):
+                    values.append(EvalFailure(
+                        reason=str(res.get("reason", "failed"))))
+                else:
+                    values.append(res["value"])
+            if observer is not None:
+                tick = clock.tick if clock is not None else round_idx
+                observer(i, tick, batch, values)
             drv.tell_batch(values)
             if not drv.done:
                 still_active.append(i)
         active = still_active
+        if clock is not None:
+            clock.advance()
+        round_idx += 1
     engine.stats = agg
     return [drv.history for drv, _b in pairs]
 

@@ -1,5 +1,10 @@
 from repro.multicloud.providers import multicloud_domain, NODE_CATALOG
 from repro.multicloud.dataset import OfflineDataset, build_dataset, Task
+from repro.multicloud.market import (
+    MarketClock, MarketEvent, MarketOverlay, TickedBinding, eval_market,
+    get_overlay, parse_schedule)
 
 __all__ = ["multicloud_domain", "NODE_CATALOG", "OfflineDataset",
-           "build_dataset", "Task"]
+           "build_dataset", "Task", "MarketClock", "MarketEvent",
+           "MarketOverlay", "TickedBinding", "eval_market", "get_overlay",
+           "parse_schedule"]

@@ -38,6 +38,14 @@ class StragglerDetector:
         else:
             self._ewma = (1 - self.alpha) * self._ewma + self.alpha * t
         self._count += 1
+        return self._flagged()
+
+    def _flagged(self) -> List[int]:
+        """Host ids whose EWMA exceeds threshold x fleet median — the one
+        place the straggler criterion lives.  Empty during warm-up: with
+        fewer than ``min_steps`` observations the EWMA is still dominated
+        by startup transients (or, before the first observe, all zeros,
+        making the median 0 and every host a "straggler")."""
         if self._count < self.min_steps:
             return []
         med = float(np.median(self._ewma))
@@ -45,9 +53,8 @@ class StragglerDetector:
             self._ewma > self.threshold * med)[0]]
 
     def healthy_hosts(self) -> List[int]:
-        med = float(np.median(self._ewma))
-        return [i for i in range(self.n_hosts)
-                if self._ewma[i] <= self.threshold * med]
+        flagged = set(self._flagged())
+        return [i for i in range(self.n_hosts) if i not in flagged]
 
 
 @dataclasses.dataclass

@@ -289,7 +289,8 @@ def main() -> None:
     # benchmarks'): a warm store replays every evaluation => computed=0
     print(f"[exp] autotune: units={lt.total} unique={lt.unique} "
           f"cached={lt.cached} computed={lt.computed} failed={lt.failed} "
-          f"retried={lt.retried}", file=sys.stderr, flush=True)
+          f"failures={len(lt.failures)} retried={lt.retried}",
+          file=sys.stderr, flush=True)
     print(json.dumps({k: v for k, v in result.items() if k != "history"},
                      indent=2, default=str))
     if args.out:

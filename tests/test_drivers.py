@@ -62,12 +62,17 @@ def test_registry_order_is_paper_order():
 
 
 def test_budget_coupled_view():
-    assert set(BUDGET_COUPLED) == {"rb", "cb_cherrypick", "cb_rbfopt"}
-    assert len(BUDGET_COUPLED) == 3
+    assert set(BUDGET_COUPLED) == {"rb", "cb_cherrypick", "cb_rbfopt",
+                                   "cb_drift", "rb_drift"}
+    assert len(BUDGET_COUPLED) == 5
     assert "rb" in BUDGET_COUPLED
     assert "random" not in BUDGET_COUPLED
     assert "nonexistent" not in BUDGET_COUPLED
     assert is_budget_coupled("cb_rbfopt") and not is_budget_coupled("smac")
+    # the drift-aware variants are registered but stay out of the
+    # paper's closed SEARCH_METHODS set
+    assert "cb_drift" not in SEARCH_METHODS
+    assert "rb_drift" not in SEARCH_METHODS
 
 
 def test_registry_unknown_method():
@@ -103,7 +108,9 @@ def test_registry_external_registration_before_builtin_access():
 def test_registry_tag_filter():
     flat = method_names(tag="flat")
     assert "random" in flat and "cb_rbfopt" not in flat
-    assert method_names(tag="bandit") == ("rb", "cb_cherrypick", "cb_rbfopt")
+    assert method_names(tag="bandit") == (
+        "rb", "cb_cherrypick", "cb_rbfopt", "cb_drift", "rb_drift")
+    assert method_names(tag="drift") == ("cb_drift", "rb_drift")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,441 @@
+"""Dynamic-market overlay, failure-aware drivers, drift-robust bandits.
+
+The robustness contract under test: a seeded market trajectory is
+bit-identical across processes/executors/replays; evaluating an
+unavailable point is a *structured* failure (never inf, never an
+exception) that every driver absorbs without crashing or poisoning its
+surrogates; and the drift-aware bandit variants detect sustained market
+shifts and take their eliminations back.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.drift import CBDriftDriver, DriftDetector, RBDriftDriver
+from repro.core.drivers import drive
+from repro.core.objectives import EvalFailure, bind_objective, get_objective
+from repro.core.optimizers import RBFOpt
+from repro.core.registry import get_method, is_budget_coupled
+from repro.exp import make_engine
+from repro.exp.runners import drive_units
+from repro.multicloud import build_dataset
+from repro.multicloud.market import (
+    MarketClock, MarketOverlay, TickedBinding, eval_market, parse_schedule)
+
+OUTAGE = "outage:aws:2:5"
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+def _market_binding(ds, workload, **over):
+    kw = dict(workload=workload, target="cost",
+              dataset_seed=int(ds.seed), market_seed=0, horizon=32,
+              walk_sigma=0.05, schedule=OUTAGE)
+    kw.update(over)
+    return bind_objective("market", **kw)
+
+
+# ---------------------------------------------------------------------------
+# schedule parsing
+# ---------------------------------------------------------------------------
+def test_parse_schedule_roundtrip():
+    evs = parse_schedule("outage:aws:2:5, step:gcp:2.5:7,"
+                         "revoke:azure:family=D_v3:1:9,slow:aws:1.5:0:4")
+    assert [e.kind for e in evs] == ["outage", "step", "revoke", "slow"]
+    out, step, rev, slow = evs
+    assert out.active(2) and out.active(4) and not out.active(5)
+    assert step.active(10 ** 9)                 # steps never end
+    assert (rev.key, rev.value) == ("family", "D_v3")
+    assert slow.factor == 1.5
+    assert parse_schedule("") == parse_schedule(None) == ()
+
+
+@pytest.mark.parametrize("spec", (
+    "meteor:aws:1:2",               # unknown kind
+    "outage:aws:3",                 # wrong field count
+    "outage:aws:5:5",               # empty range
+    "outage:aws:-1:4",              # negative start
+    "step:aws:0:3",                 # non-positive factor
+    "revoke:aws:family:1:4",        # missing key=value
+))
+def test_parse_schedule_rejects_malformed(spec):
+    with pytest.raises(ValueError, match="malformed market event"):
+        parse_schedule(spec)
+
+
+# ---------------------------------------------------------------------------
+# overlay semantics + determinism
+# ---------------------------------------------------------------------------
+def test_overlay_tick0_matches_frozen_table():
+    ov = MarketOverlay(seed=3, horizon=16, walk_sigma=0.2,
+                       schedule="step:aws:3.0:5")
+    for prov in ("aws", "gcp", "azure"):
+        assert ov.price_factor(0, prov) == 1.0
+        assert ov.value(0, 7.25, prov, "cost") == 7.25
+
+
+def test_overlay_step_scales_cost_not_time():
+    ov = MarketOverlay(horizon=16, schedule="step:aws:3.0:5")
+    assert ov.value(5, 2.0, "aws", "cost") == pytest.approx(6.0)
+    assert ov.value(5, 2.0, "aws", "time") == 2.0       # price ≠ runtime
+    assert ov.value(4, 2.0, "aws", "cost") == 2.0       # before the step
+
+
+def test_overlay_slow_scales_both_targets():
+    ov = MarketOverlay(horizon=16, schedule="slow:gcp:2.0:3:6")
+    assert ov.value(3, 1.5, "gcp", "cost") == pytest.approx(3.0)
+    assert ov.value(3, 1.5, "gcp", "time") == pytest.approx(3.0)
+    assert ov.value(6, 1.5, "gcp", "time") == 1.5       # window closed
+
+
+def test_overlay_availability_and_revocation():
+    ov = MarketOverlay(horizon=16,
+                       schedule="outage:aws:2:5,revoke:gcp:family=e2:1:9")
+    assert not ov.available(2, "aws")
+    assert "outage" in ov.unavailable_reason(4, "aws")
+    assert ov.available(5, "aws")
+    assert not ov.available(3, "gcp", {"family": "e2", "nodes": 2})
+    assert ov.available(3, "gcp", {"family": "n1", "nodes": 2})
+    assert ov.available(3, "azure", {"family": "e2"})    # other provider
+
+
+def test_overlay_clamps_past_horizon_and_rejects_negative():
+    ov = MarketOverlay(horizon=8, schedule="step:aws:2.0:3")
+    assert ov.price_factor(100, "aws") == ov.price_factor(7, "aws")
+    with pytest.raises(ValueError, match="tick"):
+        ov.price_factor(-1, "aws")
+    with pytest.raises(ValueError, match="horizon"):
+        MarketOverlay(horizon=0)
+
+
+def test_overlay_walks_deterministic_per_seed():
+    a = MarketOverlay(seed=7, horizon=64, walk_sigma=0.1)
+    b = MarketOverlay(seed=7, horizon=64, walk_sigma=0.1)
+    c = MarketOverlay(seed=8, horizon=64, walk_sigma=0.1)
+    for prov in ("aws", "gcp", "azure"):
+        np.testing.assert_array_equal(a.walk(prov), b.walk(prov))
+        assert not np.array_equal(a.walk(prov), c.walk(prov))
+    assert a.walk("aws")[0] == 1.0
+    assert not np.array_equal(a.walk("aws"), a.walk("gcp"))
+
+
+def test_overlay_instant_optimum_skips_unavailable(ds):
+    table = ds.task(ds.workloads[0], "cost").table
+    ov = MarketOverlay(horizon=8, schedule="outage:aws:0:8")
+    vals = ov.grid_values(0, table, "cost")
+    assert vals and all(p != "aws" for p, _c in vals)
+    assert ov.instant_optimum(0, table, "cost") == min(vals.values())
+    dark = MarketOverlay(horizon=8, schedule="outage:aws:0:8,"
+                         "outage:gcp:0:8,outage:azure:0:8")
+    assert dark.instant_optimum(0, table, "cost") is None
+
+
+# ---------------------------------------------------------------------------
+# the market objective
+# ---------------------------------------------------------------------------
+def test_market_objective_registered_outside_table_sets():
+    spec = get_objective("market")
+    assert "dynamic" in spec.tags and "market" in spec.tags
+    assert "table" not in spec.tags and "measured" not in spec.tags
+
+
+def test_eval_market_structured_failure_and_value(ds):
+    w = ds.workloads[0]
+    task = ds.task(w, "cost")
+    prov = "aws"
+    cfg = ds.domain.inner_candidates(prov)[0]
+    base = dict(workload=w, target="cost", market_seed=0, horizon=32,
+                walk_sigma=0.0, schedule=OUTAGE, provider=prov, config=cfg)
+    ctx = {"dataset_seed": int(ds.seed)}
+    down = eval_market({**base, "tick": 3}, ctx)
+    assert down["failed"] and "outage" in down["reason"]
+    up = eval_market({**base, "tick": 0}, ctx)
+    assert up["value"] == pytest.approx(float(task.objective(prov, cfg)))
+    stepped = eval_market({**base, "tick": 9,
+                           "schedule": "step:aws:2.0:8"}, ctx)
+    assert stepped["value"] == pytest.approx(2 * up["value"])
+
+
+def test_ticked_binding_mints_distinct_units_per_tick(ds):
+    clock = MarketClock()
+    binding = _market_binding(ds, ds.workloads[0])
+    ticked = TickedBinding(binding, clock)
+    prov = "gcp"
+    cfg = ds.domain.inner_candidates(prov)[0]
+    u0 = ticked.unit(prov, cfg)
+    clock.advance()
+    u1 = ticked.unit(prov, cfg)
+    assert u0 != u1
+    assert dict(u0.params)["tick"] == 0 and dict(u1.params)["tick"] == 1
+    assert "tick=1" in ticked.describe()
+    # the identity params are reserved: extras must never shadow them
+    with pytest.raises(ValueError, match="collide"):
+        binding.unit(prov, cfg, workload="other")
+
+
+# ---------------------------------------------------------------------------
+# failure-aware drive_units: clock, observer, structured failures
+# ---------------------------------------------------------------------------
+def test_drive_units_market_outage_never_aborts(ds):
+    engine = make_engine(ds)
+    clock = MarketClock()
+    binding = TickedBinding(
+        _market_binding(ds, ds.workloads[0],
+                        schedule="outage:aws:0:6,outage:gcp:2:4"), clock)
+    drv = get_method("cb_rbfopt").make_driver(ds.domain, 12, 0,
+                                              target="cost")
+    seen = []
+    (hist,) = drive_units(engine, [(drv, binding)], clock=clock,
+                          on_failure="tell",
+                          observer=lambda i, t, b, v: seen.append((i, t)))
+    assert drv.failures                         # the outage was felt...
+    assert engine.lifetime.failed == 0          # ...as data, not an abort
+    assert all(math.isfinite(v) for v in hist.values)
+    rounds = len(seen)
+    assert clock.tick == rounds                 # one tick per ask round
+    assert [t for _i, t in seen] == list(range(rounds))
+
+
+def test_drive_units_engine_failure_routing(ds):
+    drv = get_method("random").make_driver(ds.domain, 4, 0)
+    with pytest.raises(ValueError, match="on_failure"):
+        drive_units(make_engine(ds), [(drv, "w", "cost")],
+                    on_failure="ignore")
+    # a worker exception (unknown workload) raises by default but is
+    # downgraded to EvalFailure tells under on_failure="tell"
+    drv = get_method("random").make_driver(ds.domain, 4, 0)
+    (hist,) = drive_units(make_engine(ds),
+                          [(drv, "no-such-workload", "cost")],
+                          on_failure="tell")
+    assert len(drv.failures) == 4
+    assert all(math.isfinite(v) for v in hist.values)
+
+
+def test_market_run_bit_identical_across_executors(ds, tmp_path):
+    """Same seed + schedule => bit-identical trajectories on serial,
+    thread, and process executors, cold stores each."""
+    hists = {}
+    for ex in ("serial", "thread", "process"):
+        engine = make_engine(ds, store_path=str(tmp_path / f"{ex}.jsonl"),
+                             executor=ex, workers=2)
+        clock = MarketClock()
+        binding = TickedBinding(_market_binding(ds, ds.workloads[1]), clock)
+        drv = get_method("cb_rbfopt").make_driver(ds.domain, 12, 0,
+                                                  target="cost")
+        (hists[ex],) = drive_units(engine, [(drv, binding)], clock=clock,
+                                   on_failure="tell")
+    assert hists["serial"].points == hists["thread"].points
+    assert hists["serial"].values == hists["thread"].values
+    assert hists["serial"].points == hists["process"].points
+    assert hists["serial"].values == hists["process"].values
+
+
+def test_market_faulted_run_replays_warm(ds, tmp_path):
+    """A drift run with structured failures replays from a warm store
+    with computed=0 — failures are stored results like any other."""
+    store_path = str(tmp_path / "units.jsonl")
+    hists = []
+    for phase in ("cold", "warm"):
+        engine = make_engine(ds, store_path=store_path)
+        clock = MarketClock()
+        binding = TickedBinding(
+            _market_binding(ds, ds.workloads[0],
+                            schedule="outage:aws:1:4"), clock)
+        drv = get_method("rb").make_driver(ds.domain, 10, 0, target="cost")
+        (h,) = drive_units(engine, [(drv, binding)], clock=clock,
+                           on_failure="tell")
+        hists.append(h)
+        assert drv.failures
+        if phase == "cold":
+            assert engine.lifetime.computed > 0
+        else:
+            assert engine.lifetime.computed == 0
+            assert engine.lifetime.cached > 0
+    assert hists[0].points == hists[1].points
+    assert hists[0].values == hists[1].values
+
+
+# ---------------------------------------------------------------------------
+# driver failure semantics: NaN rejection, pause/resurrect
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ("random", "cherrypick_x3", "cb_rbfopt",
+                                    "rb"))
+@pytest.mark.parametrize("bad", (float("nan"), float("inf")))
+def test_nonfinite_tell_rejected_loudly(method, bad, ds):
+    drv = get_method(method).make_driver(ds.domain, 11, 0, target="cost")
+    batch = drv.ask_batch()
+    with pytest.raises(ValueError, match="non-finite tell"):
+        drv.tell_batch([bad] * len(batch))
+
+
+def test_flat_driver_penalizes_and_continues(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    drv = get_method("random").make_driver(ds.domain, 6, 0)
+    fail_next = [True]
+    while not drv.done:
+        batch = drv.ask_batch()
+        if fail_next[0]:
+            drv.tell_batch([EvalFailure(reason="revoked")])
+            fail_next[0] = False
+        else:
+            drv.tell_batch([task.objective(p, c) for p, c in batch])
+    assert len(drv.failures) == 1
+    assert drv.failures[0]["reason"] == "revoked"
+    assert len(drv.history) == 6                # budget still consumed
+    assert all(math.isfinite(v) for v in drv.history.values)
+
+
+def test_cloudbandit_pause_and_resurrect(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    drv = get_method("cb_rbfopt").make_driver(ds.domain, 33, 0,
+                                              target="cost")
+    dead = {"aws"}
+    rounds = 0
+    while not drv.done:
+        batch = drv.ask_batch()
+        rounds += 1
+        if rounds == 3:
+            dead = set()                        # aws comes back
+        drv.tell_batch([
+            EvalFailure(reason="outage") if p in dead
+            else task.objective(p, c) for p, c in batch])
+        if rounds == 1:
+            assert "aws" in drv.paused          # paused, not eliminated
+            assert "aws" not in drv.active
+            assert all(a != "aws" for a, _m in drv.eliminated)
+        if rounds == 3:
+            assert "aws" in drv.active          # probe resurrected it
+    assert ("aws", drv.resurrections[0][1]) == drv.resurrections[0]
+    assert drv.failures and drv.result() is not None
+    assert all(math.isfinite(v) for v in drv.history.values)
+
+
+def test_rising_bandits_pause_and_resurrect(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    drv = get_method("rb").make_driver(ds.domain, 18, 0, target="cost")
+    rounds = 0
+    while not drv.done:
+        batch = drv.ask_batch()
+        rounds += 1
+        dead = {"gcp"} if rounds <= 2 else set()
+        drv.tell_batch([
+            EvalFailure(reason="revoked") if p in dead
+            else task.objective(p, c) for p, c in batch])
+        if rounds == 1:
+            assert "gcp" in drv.paused
+        if rounds == 3:
+            assert "gcp" in drv.active
+    assert drv.resurrections
+    assert drv.used == 18                       # failures consume budget
+    assert all(math.isfinite(v) for v in drv.history.values)
+
+
+def test_all_arms_dead_terminates_with_clear_error(ds):
+    drv = get_method("cb_rbfopt").make_driver(ds.domain, 12, 0,
+                                              target="cost")
+    while not drv.done:
+        batch = drv.ask_batch()
+        drv.tell_batch([EvalFailure(reason="dark")] * len(batch))
+    with pytest.raises(RuntimeError, match="every arm failed every pull"):
+        drv.result()
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+def test_drift_detector_ignores_stationary_noise():
+    det = DriftDetector()
+    rng = np.random.default_rng(0)
+    assert not any(det.observe(1.0 + rng.normal(0, 0.05))
+                   for _ in range(200))
+
+
+def test_drift_detector_fires_on_sustained_step_only():
+    det = DriftDetector(min_obs=5, patience=3)
+    for _ in range(20):
+        assert not det.observe(1.0)
+    fired = [det.observe(3.0) for _ in range(6)]
+    assert any(fired)
+    assert not fired[0]                 # patience: never on first sight
+    det.reset()
+    assert not det.drifted()
+
+
+def test_drift_detector_warmup_guard():
+    det = DriftDetector(min_obs=8, patience=1)
+    # a huge early swing inside the warm-up window must not fire
+    assert not any(det.observe(v) for v in (1.0, 9.0, 9.0, 9.0, 9.0))
+
+
+def test_drift_detector_spike_does_not_fire():
+    det = DriftDetector(min_obs=3)
+    for _ in range(10):
+        det.observe(1.0)
+    # one isolated spike, then recovery: the fast EWMA needs a couple
+    # of observations to decay back, and patience must absorb that
+    assert not any(det.observe(v) for v in (8.0, 1.0, 1.0, 1.0))
+    assert not det.drifted()
+
+
+# ---------------------------------------------------------------------------
+# drift-aware drivers
+# ---------------------------------------------------------------------------
+def test_drift_methods_registered_budget_coupled():
+    assert is_budget_coupled("cb_drift") and is_budget_coupled("rb_drift")
+    assert isinstance(
+        get_method("cb_drift").make_driver(
+            build_dataset().domain, 33, 0, target="cost"), CBDriftDriver)
+
+
+def _step_objective(task, step_at, factor):
+    """Frozen table that shifts wholesale after ``step_at`` calls."""
+    calls = [0]
+
+    def objective(prov, cfg):
+        calls[0] += 1
+        f = factor if calls[0] > step_at else 1.0
+        return float(task.objective(prov, cfg)) * f
+    return objective
+
+
+def test_cb_drift_inert_on_frozen_world(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    drv = CBDriftDriver(ds.domain, RBFOpt, budget=33, seed=0)
+    drive(drv, task.objective)
+    assert drv.drift_events == []
+    assert drv.used == 33
+
+
+def test_cb_drift_detects_step_and_unwinds_eliminations(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    drv = CBDriftDriver(ds.domain, RBFOpt, budget=60, seed=0)
+    drive(drv, _step_objective(task, step_at=25, factor=6.0))
+    assert drv.drift_events                     # the shift was noticed
+    assert drv.drift_events[0]["eval"] > 25
+    assert drv.eliminated == []                 # eliminations unwound
+    assert drv.result().provider in ds.domain.provider_names
+
+
+def test_rb_drift_detects_step_and_restarts_curves(ds):
+    task = ds.task(ds.workloads[0], "cost")
+    drv = RBDriftDriver(ds.domain, 60, seed=0)
+    drive(drv, _step_objective(task, step_at=20, factor=6.0))
+    assert drv.drift_events
+    k, cfg, loss, hist = drv.result()
+    assert k in ds.domain.provider_names and math.isfinite(loss)
+    assert len(hist) == 60
+
+
+def test_rb_drift_inert_on_frozen_world_matches_rb(ds):
+    """With no drift the detector must never fire, and rb_drift's
+    trajectory is bit-identical to plain rb."""
+    task = ds.task(ds.workloads[0], "cost")
+    a = get_method("rb").make_driver(ds.domain, 22, 0, target="cost")
+    b = get_method("rb_drift").make_driver(ds.domain, 22, 0, target="cost")
+    ha, hb = drive(a, task.objective), drive(b, task.objective)
+    assert b.drift_events == []
+    assert ha.points == hb.points and ha.values == hb.values

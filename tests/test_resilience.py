@@ -107,6 +107,23 @@ def test_training_with_compression_converges(tmp_path):
     assert np.isfinite(r["losses"]).all()
 
 
+def test_straggler_detector_warmup():
+    """Before min_steps observations no host may be flagged — the EWMA
+    is still dominated by its first samples — and healthy_hosts() must
+    agree with observe() both during and after warm-up."""
+    det = StragglerDetector(n_hosts=4, min_steps=3)
+    t = np.ones(4)
+    t[2] = 5.0                          # slow from the very first step
+    for step in range(1, 6):
+        flagged = det.observe(t)
+        if step < 3:
+            assert flagged == []
+            assert det.healthy_hosts() == [0, 1, 2, 3]
+        else:
+            assert flagged == [2]
+            assert det.healthy_hosts() == [0, 1, 3]
+
+
 def test_straggler_detector():
     det = StragglerDetector(n_hosts=8, min_steps=3)
     rng = np.random.default_rng(0)

@@ -72,13 +72,19 @@ def report_engine(name: str, engine) -> None:
               flush=True)
 
 
-def out_path(name: str) -> str:
+def out_path(name: str, variant: str = None) -> str:
+    """CSV path for one benchmark table.  ``variant`` keys the cache by
+    run mode (``kernels.quick.csv`` vs ``kernels.csv``): a table whose
+    contents depend on ``--quick`` must pass it, so a stale quick table
+    can never masquerade as a full run (or vice versa).  Benchmarks
+    whose output is mode-independent simply never pass a variant."""
     os.makedirs(OUT_DIR, exist_ok=True)
-    return os.path.join(OUT_DIR, name + ".csv")
+    stem = f"{name}.{variant}" if variant else name
+    return os.path.join(OUT_DIR, stem + ".csv")
 
 
-def cached(name: str) -> List[List[str]]:
-    p = out_path(name)
+def cached(name: str, variant: str = None) -> List[List[str]]:
+    p = out_path(name, variant)
     if not os.path.exists(p):
         return []
     with open(p) as f:
@@ -86,9 +92,10 @@ def cached(name: str) -> List[List[str]]:
 
 
 def write_rows(name: str, header: Sequence[str],
-               rows: Iterable[Sequence]) -> List[List[str]]:
+               rows: Iterable[Sequence],
+               variant: str = None) -> List[List[str]]:
     rows = [[str(c) for c in r] for r in rows]
-    with open(out_path(name), "w", newline="") as f:
+    with open(out_path(name, variant), "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(header)
         w.writerows(rows)

@@ -1,0 +1,193 @@
+"""Fig. 6 — regret vs. spend: multi-fidelity search against flat methods.
+
+Two domains, one driver/engine stack.  The *offline* domain is the
+paper's 30×88 table behind its fidelity ladder (``offline_proxy`` →
+``offline``): the proxy is a deterministic noisy probe, ground truth is
+the exact lookup, and the known table optimum prices the regret.  The
+*kernel* domain searches the framework's own pallas kernels
+(``kernel_analytic`` → ``kernel_time``, block sizes / grid shapes of
+flash_attention, decode_attention, ssd_scan) with the fixed
+``benchmarks/kernels.py`` timing harness as ground truth; the true
+optimum is an exhaustive top-rung sweep of the grid, shared through the
+store with the searches themselves.
+
+Scored: final relative regret and spend — ground-truth (top-rung)
+evaluation count, low-fidelity probe count, and for the kernel domain
+estimated evaluation-seconds per method (from per-unit compute times
+the store records at first execution, stable across replays).  The
+multi-fidelity claim this figure is about: at least one of ``mf_sh`` /
+``mf_prefilter`` matches the flat methods' final regret at measurably
+lower spend.  Full results land in ``BENCH_fidelity.json``.
+
+The ``derived`` CSV column carries regret + eval counts only (both
+bit-stable given a shared store); wall-clock stays out of it so the
+serial-vs-thread CI diff holds.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import (
+    ROOT, check_methods_registered, emit, figure_engine, report_engine,
+    write_rows)
+from repro.core.fidelity import bind_ladder
+from repro.core.registry import get_method
+from repro.exp.runners import drive_units
+from repro.multicloud import build_dataset
+from repro.tuner.autotune import driver_best
+
+NAME = "fig6_fidelity"
+#: flat single-fidelity baselines vs. the multi-fidelity drivers
+METHODS_FLAT = ("random", "smac")
+METHODS_MF = ("mf_sh", "mf_prefilter")
+METHODS = METHODS_FLAT + METHODS_MF
+TARGET = "cost"
+OFFLINE_BUDGET = 33
+KERNEL_BUDGET = 9
+BENCH_PATH = os.path.join(ROOT, "BENCH_fidelity.json")
+
+
+def _top_rung(drv) -> int:
+    """Ground-truth evaluations one completed driver spent."""
+    spend = getattr(drv, "spend", None)
+    if spend:
+        return int(spend[max(spend)])
+    return len(drv.history.values)
+
+
+def _low_rung(drv) -> int:
+    spend = getattr(drv, "spend", None)
+    if spend and len(spend) > 1:
+        return int(sum(v for k, v in spend.items() if k != max(spend)))
+    return 0
+
+
+def _search_cell(engine, domain, ladder, budget, seed, true_min, acc):
+    """One (domain, seed) cell: every method over the same ladder."""
+    drivers = [get_method(m).make_driver(domain, budget, seed,
+                                         target=TARGET)
+               for m in METHODS]
+    drive_units(engine, [(d, ladder) for d in drivers])
+    for m, drv in zip(METHODS, drivers):
+        _prov, _cfg, best = driver_best(drv)
+        acc.setdefault(m, {"regret": [], "top": [], "low": []})
+        acc[m]["regret"].append((best - true_min) / true_min)
+        acc[m]["top"].append(_top_rung(drv))
+        acc[m]["low"].append(_low_rung(drv))
+
+
+def _rung_sweep_seconds(engine, units) -> float:
+    """Mean per-unit compute seconds of one full-grid rung sweep, read
+    from the store's first-execution timings — identical on replay."""
+    engine.run(units)
+    n = max(len(units), 1)
+    return float(engine.stats.unit_elapsed_s) / n
+
+
+def _summarize(acc):
+    out = {}
+    for m in METHODS:
+        out[m] = {
+            "mean_regret": round(float(np.mean(acc[m]["regret"])), 4),
+            "top_evals": round(float(np.mean(acc[m]["top"])), 1),
+            "low_evals": round(float(np.mean(acc[m]["low"])), 1),
+        }
+    flat_best = min(out[m]["mean_regret"] for m in METHODS_FLAT)
+    flat_cheapest = min(out[m]["top_evals"] for m in METHODS_FLAT)
+    wins = [m for m in METHODS_MF
+            if out[m]["mean_regret"] <= flat_best + 1e-9
+            and out[m]["top_evals"] < flat_cheapest]
+    return out, wins
+
+
+def run(seeds=range(2), quick: bool = False, workers: int = 1, store=None,
+        executor: str = None, store_dir: str = None, hosts: str = None,
+        timeout: float = None, retries: int = 0):
+    check_methods_registered(METHODS)
+    ds = build_dataset()
+    engine = figure_engine(ds, workers=workers, store=store,
+                           executor=executor, store_dir=store_dir,
+                           hosts=hosts, timeout=timeout, retries=retries)
+    workloads = ds.workloads[::10] if quick else ds.workloads
+    seeds = list(seeds)[:1] if quick else list(seeds)
+    preset = "tiny" if quick else "small"
+    reps = 3 if quick else 5
+    off_acc, ker_acc = {}, {}
+    with engine:
+        # ---- offline-table domain --------------------------------
+        for w in workloads:
+            task = ds.task(w, TARGET)
+            ladder = bind_ladder("offline", workload=w, target=TARGET,
+                                 dataset_seed=int(ds.seed))
+            for seed in seeds:
+                _search_cell(engine, ds.domain, ladder, OFFLINE_BUDGET,
+                             seed, task.true_min, off_acc)
+        # ---- kernel config-space domain --------------------------
+        ladder = bind_ladder("kernel", preset=preset, reps=reps)
+        kdom = ladder.make_domain()
+        cands = kdom.all_candidates()
+        # exhaustive ground truth doubles as the rung cost probe; its
+        # units share content keys with the searches' top-rung evals
+        low_s = _rung_sweep_seconds(
+            engine, [ladder.rung_unit(0, p, c) for p, c in cands])
+        top_units = [ladder.unit(p, c) for p, c in cands]
+        top_s = _rung_sweep_seconds(engine, top_units)
+        truth = engine.run(top_units)
+        ker_min = min(r["value"] for r in truth)
+        for seed in seeds:
+            _search_cell(engine, kdom, ladder, KERNEL_BUDGET, seed,
+                         ker_min, ker_acc)
+    off_sum, off_wins = _summarize(off_acc)
+    ker_sum, ker_wins = _summarize(ker_acc)
+    for m in METHODS:
+        ker_sum[m]["est_seconds"] = round(
+            ker_sum[m]["top_evals"] * top_s
+            + ker_sum[m]["low_evals"] * low_s, 4)
+    bench = {
+        "quick": bool(quick), "target": TARGET,
+        "seeds": [int(s) for s in seeds],
+        "domains": {
+            "offline": {"budget": OFFLINE_BUDGET,
+                        "workloads": list(workloads),
+                        "methods": off_sum, "wins": off_wins},
+            "kernel": {"budget": KERNEL_BUDGET, "preset": preset,
+                       "reps": reps, "grid": len(cands),
+                       "true_min": round(float(ker_min), 4),
+                       "top_unit_seconds": round(top_s, 4),
+                       "low_unit_seconds": round(low_s, 6),
+                       "methods": ker_sum, "wins": ker_wins},
+        },
+    }
+    out = []
+    for dom_name, summ in (("offline", off_sum), ("kernel", ker_sum)):
+        for m in METHODS:
+            s = summ[m]
+            # us_per_call deliberately empty: wall-clock derived columns
+            # would break the serial-vs-thread bit-identity gate
+            out.append([f"fig6.{dom_name}.{m}", "",
+                        f"regret={s['mean_regret']}"
+                        f"|top={s['top_evals']}|low={s['low_evals']}"])
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    report_engine(NAME, engine)
+    print(f"[exp] {NAME}: wins_offline={','.join(off_wins) or 'none'} "
+          f"wins_kernel={','.join(ker_wins) or 'none'}",
+          file=sys.stderr, flush=True)
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False, workers: int = 1, executor: str = None,
+         store_dir: str = None, hosts: str = None, timeout: float = None,
+         retries: int = 0) -> None:
+    emit(run(quick=quick, workers=workers, executor=executor,
+             store_dir=store_dir, hosts=hosts, timeout=timeout,
+             retries=retries))
+
+
+if __name__ == "__main__":
+    main()

@@ -5,33 +5,42 @@ emulator), so us_per_call compares the jnp reference against itself on CPU;
 the derived column reports the kernel's analytic FLOPs and the max |err|
 vs the oracle — the numbers that transfer to TPU are the block shapes and
 the validated math.
+
+These timings are the ground truth the ``kernel`` fidelity ladder ranks
+against, so the harness is the shared :func:`repro.kernels.bench.
+time_fn`: warm-up synchronized with ``block_until_ready`` (async
+dispatch must not leak into the timed region), per-rep
+``time.perf_counter`` (monotonic, high-resolution), median-of-reps.
+``--quick`` runs fewer reps and keeps its own CSV cache variant — a
+quick table never masquerades as a full run.
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import cached, emit, write_rows
 from repro.kernels import ops
+from repro.kernels.bench import time_fn
 from repro.kernels.ref import decode_mha_ref, mha_ref, ssd_ref
 
 NAME = "kernels"
 
+#: median-of-reps per timing; quick trades stability for wall time
+REPS_FULL = 7
+REPS_QUICK = 3
 
-def _time(fn, *args, reps=3):
-    fn(*args)                      # compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
+
+def _time(fn, *args, reps=REPS_FULL):
+    return time_fn(fn, *args, reps=reps)
 
 
 def run(quick: bool = False):
-    rows = cached(NAME)
+    variant = "quick" if quick else None
+    rows = cached(NAME, variant=variant)
     if rows:
         return rows
+    import jax
+    reps = REPS_QUICK if quick else REPS_FULL
     rng = jax.random.PRNGKey(0)
     out = []
 
@@ -41,9 +50,10 @@ def run(quick: bool = False):
     q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
-    t_ref = _time(lambda *a: mha_ref(*a, causal=True), q, k, v)
+    t_ref = _time(lambda *a: mha_ref(*a, causal=True), q, k, v, reps=reps)
     t_k = _time(lambda *a: ops.flash_attention(*a, causal=True,
-                                               interpret=True), q, k, v)
+                                               interpret=True), q, k, v,
+                reps=reps)
     err = float(jnp.max(jnp.abs(
         ops.flash_attention(q, k, v, causal=True, interpret=True)
         - mha_ref(q, k, v, causal=True))))
@@ -62,9 +72,10 @@ def run(quick: bool = False):
     Bm = jax.random.normal(ks[3], (B, L, N)) * 0.3
     Cm = jax.random.normal(ks[4], (B, L, N)) * 0.3
     Dv = jnp.ones((H,))
-    t_ref = _time(lambda *a: ssd_ref(*a, chunk=128)[0], x, dt, A, Bm, Cm, Dv)
+    t_ref = _time(lambda *a: ssd_ref(*a, chunk=128)[0], x, dt, A, Bm, Cm, Dv,
+                  reps=reps)
     t_k = _time(lambda *a: ops.ssd(*a, chunk=128, interpret=True)[0],
-                x, dt, A, Bm, Cm, Dv)
+                x, dt, A, Bm, Cm, Dv, reps=reps)
     err = float(jnp.max(jnp.abs(
         ops.ssd(x, dt, A, Bm, Cm, Dv, chunk=128, interpret=True)[0]
         - ssd_ref(x, dt, A, Bm, Cm, Dv, chunk=128)[0])))
@@ -79,9 +90,10 @@ def run(quick: bool = False):
     q = jax.random.normal(ks[0], (B, Hq, D))
     k = jax.random.normal(ks[1], (B, Hkv, S, D))
     v = jax.random.normal(ks[2], (B, Hkv, S, D))
-    t_ref = _time(lambda *a: decode_mha_ref(*a, length=2000), q, k, v)
+    t_ref = _time(lambda *a: decode_mha_ref(*a, length=2000), q, k, v,
+                  reps=reps)
     t_k = _time(lambda *a: ops.decode_attention(*a, 2000, interpret=True),
-                q, k, v)
+                q, k, v, reps=reps)
     err = float(jnp.max(jnp.abs(
         ops.decode_attention(q, k, v, 2000, interpret=True)
         - decode_mha_ref(q, k, v, length=2000))))
@@ -89,7 +101,8 @@ def run(quick: bool = False):
                 f"flops={4*B*Hq*S*D:.2e}"])
     out.append(["kernels.decode_attention.pallas_interpret", round(t_k, 1),
                 f"maxerr={err:.2e}"])
-    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out,
+                      variant=variant)
 
 
 def main(quick: bool = False) -> None:

@@ -49,10 +49,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
-                            fig5_drift, kernels, roofline, surrogates,
-                            table2_dataset)
+                            fig5_drift, fig6_fidelity, kernels, roofline,
+                            surrogates, table2_dataset)
     modules = [table2_dataset, fig2_sota, fig3_hierarchical, fig4_savings,
-               fig5_drift, surrogates, roofline, kernels]
+               fig5_drift, fig6_fidelity, surrogates, roofline, kernels]
     print("name,us_per_call,derived")
     ok = True
     for mod in modules:

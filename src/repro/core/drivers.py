@@ -614,7 +614,9 @@ def _make_cb_rbfopt(domain, budget, seed, target):
     return CloudBanditDriver(domain, RBFOpt, b1=b1, seed=seed)
 
 
-# drift-robust variants (cb_drift / rb_drift) register on import; they
-# live in their own module but are part of the builtin set the registry
-# loads through this one
+# drift-robust variants (cb_drift / rb_drift) and the multi-fidelity
+# drivers (mf_sh / mf_prefilter) register on import; they live in their
+# own modules but are part of the builtin set the registry loads
+# through this one
 from repro.core import drift as _drift      # noqa: E402,F401
+from repro.core import fidelity as _fidelity    # noqa: E402,F401

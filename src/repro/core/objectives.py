@@ -28,6 +28,18 @@ params / defaults / context_params
 tags
     Free-form labels (``"table"``, ``"measured"``, ``"compile"``, ...)
     for filtering, mirroring method tags.
+family / rung
+    The fidelity axis.  Objectives sharing a ``family`` are *rungs of
+    one ladder* — cheaper approximations of the same ground truth —
+    ordered by integer ``rung`` (0 = cheapest), with exactly one spec
+    per family registered at ``rung=None``: the *top rung*, the ground
+    truth the ladder approximates.  Reduced-fidelity units carry a
+    ``fidelity`` field in their content key; top-rung units (and any
+    objective without a family) omit it, so a ladder's real
+    measurements share content keys with the flat single-fidelity
+    world — every pre-fidelity store replays bit-identically, and a
+    multi-fidelity search's top-rung evaluations are cache hits for
+    flat methods (and vice versa).
 
 A spec bound to concrete parameters is an :class:`ObjectiveBinding`: it
 mints content-keyed eval units, builds the domain, and contributes the
@@ -35,12 +47,15 @@ engine context — the one object ``drive_units`` needs to run any search
 driver against any objective through the engine (store memoization,
 executor fan-out, timeouts, retries).
 
-Four builtins register here: ``offline`` (the paper's lookup table),
-``compile_cost`` (roofline-scored XLA compile of a sharding candidate,
-:mod:`repro.tuner.objective`), ``dryrun`` (the full lower+compile cell
-via the existing ``python -m repro.launch.dryrun`` subprocess), and
-``market`` (the offline table under a dynamic market overlay with
-structured failures, :mod:`repro.multicloud.market`).
+The builtins registered here form three fidelity ladders plus the
+market overlay: ``offline_proxy`` → ``offline`` (the paper's lookup
+table, family ``offline``); ``hlo_cost`` → ``compile_cost`` →
+``dryrun`` (analytic roofline estimate, roofline-scored XLA compile,
+and the full ``python -m repro.launch.dryrun`` subprocess — family
+``sharding``); ``kernel_analytic`` → ``kernel_time`` (the pallas
+kernel config spaces of :mod:`repro.kernels.bench`, family
+``kernel``); and ``market`` (the offline table under a dynamic market
+overlay with structured failures, :mod:`repro.multicloud.market`).
 """
 from __future__ import annotations
 
@@ -112,6 +127,18 @@ class ObjectiveSpec:
     defaults: Tuple[Tuple[str, Any], ...] = ()
     context_params: Tuple[str, ...] = ()
     tags: Tuple[str, ...] = ()
+    #: fidelity ladder membership: None = no ladder (flat objective)
+    family: Optional[str] = None
+    #: rung within the family; None = the top rung (ground truth) —
+    #: the only rung whose units omit the ``fidelity`` key field
+    rung: Optional[int] = None
+
+    @property
+    def is_top_rung(self) -> bool:
+        """True for ground truth: either no ladder at all, or the
+        family's declared top (``rung=None``).  Only reduced-fidelity
+        rungs stamp ``fidelity`` into content keys."""
+        return self.family is None or self.rung is None
 
     def canonical_params(self, overrides: Mapping[str, Any]
                          ) -> Dict[str, Any]:
@@ -195,6 +222,13 @@ class ObjectiveBinding:
         one stored record.  For ``offline`` the ``objective`` field is
         omitted entirely: pre-registry stores replay bit-identically.
 
+        Reduced-fidelity rungs of a ladder additionally carry a
+        ``fidelity`` field (the spec's rung); top rungs and
+        family-less objectives omit it, so ground-truth measurements
+        keep the exact flat-world content keys — pre-fidelity stores
+        replay with computed=0 and multi-fidelity searches share
+        top-rung records with flat methods.
+
         ``extra`` adds identity-bearing per-request fields — e.g. the
         market clock's ``tick``, which makes the same point at two
         market states two distinct cached records.
@@ -202,7 +236,7 @@ class ObjectiveBinding:
         from repro.exp.engine import WorkUnit
         kw = self.unit_params()
         collide = sorted(set(extra) & (set(kw) | {"provider", "config",
-                                                  "objective"}))
+                                                  "objective", "fidelity"}))
         if collide:
             raise ValueError(
                 f"unit() extra field(s) {collide} collide with "
@@ -210,6 +244,8 @@ class ObjectiveBinding:
         kw.update(extra)
         if self.spec.name != DEFAULT_OBJECTIVE:
             kw["objective"] = self.spec.name
+        if not self.spec.is_top_rung:
+            kw["fidelity"] = int(self.spec.rung)
         return WorkUnit.make("eval", provider=provider,
                              config=tuple(sorted(config.items())), **kw)
 
@@ -246,7 +282,9 @@ def register_objective(name: str,
                        params: Tuple[str, ...] = (),
                        defaults: Optional[Mapping[str, Any]] = None,
                        context_params: Tuple[str, ...] = (),
-                       tags: Tuple[str, ...] = ()) -> ObjectiveSpec:
+                       tags: Tuple[str, ...] = (),
+                       family: Optional[str] = None,
+                       rung: Optional[int] = None) -> ObjectiveSpec:
     """Register an objective family.
 
     ``evaluate`` is a ``module:qualname`` string or a module-level
@@ -255,6 +293,13 @@ def register_objective(name: str,
     from this registry, so a custom objective's defining module must be
     importable worker-side — pass it via the engine's
     ``local_context["objective_modules"]`` for process/remote backends.
+
+    ``family``/``rung`` place the objective on a fidelity ladder:
+    ``rung=None`` declares the family's single top rung (ground
+    truth); integer rungs are cheaper approximations, keyed with a
+    ``fidelity`` field so their records never collide with real
+    measurements.  A rung is meaningless without a family, and rung
+    slots (including the top) are unique within a family.
     """
     if callable(evaluate):
         evaluate = _fn_ref(evaluate)
@@ -265,13 +310,27 @@ def register_objective(name: str,
     bad_ctx = sorted(set(context_params) - set(params))
     if bad_ctx:
         raise ValueError(f"context_params {bad_ctx} not in params")
+    if rung is not None and family is None:
+        raise ValueError(f"objective {name!r}: rung={rung} without a family")
+    if rung is not None and (not isinstance(rung, int) or rung < 0):
+        raise ValueError(
+            f"objective {name!r}: rung must be a non-negative int or "
+            f"None (the top rung), got {rung!r}")
+    if family is not None:
+        for other in _REGISTRY.values():
+            if other.family == family and other.rung == rung:
+                slot = "top rung" if rung is None else f"rung {rung}"
+                raise ValueError(
+                    f"objective {name!r}: family {family!r} already has "
+                    f"its {slot} ({other.name!r})")
     if name in _REGISTRY:
         raise ValueError(f"objective {name!r} already registered")
     spec = ObjectiveSpec(
         name=name, evaluate=evaluate, domain_factory=domain_factory,
         params=tuple(params),
         defaults=tuple(sorted((defaults or {}).items())),
-        context_params=tuple(context_params), tags=tuple(tags))
+        context_params=tuple(context_params), tags=tuple(tags),
+        family=family, rung=rung)
     _REGISTRY[name] = spec
     return spec
 
@@ -301,6 +360,38 @@ def objective_specs() -> Tuple[ObjectiveSpec, ...]:
     return tuple(_REGISTRY.values())
 
 
+def fidelity_ladder(family: str) -> Tuple[ObjectiveSpec, ...]:
+    """The family's rungs, cheapest first, ground truth (``rung=None``)
+    last.  A ladder is only usable once its top rung is registered —
+    multi-fidelity search without a ground truth is unanswerable."""
+    _ensure_builtin()
+    members = [s for s in _REGISTRY.values() if s.family == family]
+    if not members:
+        raise KeyError(
+            f"unknown objective family {family!r}; families: "
+            f"{', '.join(sorted({s.family for s in _REGISTRY.values() if s.family}))}")
+    members.sort(key=lambda s: (s.rung is None, s.rung or 0))
+    if members[-1].rung is not None:
+        raise ValueError(
+            f"objective family {family!r} has no top rung (rung=None): "
+            f"{[s.name for s in members]}")
+    if len(members) < 2:
+        raise ValueError(
+            f"objective family {family!r} is a one-rung ladder "
+            f"({members[0].name!r}); register a cheaper rung first")
+    return tuple(members)
+
+
+def objective_families() -> Tuple[str, ...]:
+    """Registered fidelity families, in first-registration order."""
+    _ensure_builtin()
+    seen = []
+    for s in _REGISTRY.values():
+        if s.family is not None and s.family not in seen:
+            seen.append(s.family)
+    return tuple(seen)
+
+
 # ---------------------------------------------------------------------------
 # Builtin: offline — the paper's 30×88 lookup table
 # ---------------------------------------------------------------------------
@@ -321,6 +412,34 @@ def _offline_domain(params: Dict[str, Any]):
 
 
 # ---------------------------------------------------------------------------
+# Builtin: offline_proxy — the offline table's low-fidelity rung
+# ---------------------------------------------------------------------------
+def eval_offline_proxy(params: Dict[str, Any],
+                       context: Dict[str, Any]) -> dict:
+    """Noisy-but-cheap probe of the offline table: the true value under
+    deterministic multiplicative lognormal noise, the classic shape of
+    a partial-execution estimate (run the workload briefly, extrapolate
+    — "Fast and Low-cost Search for Efficient Cloud Configurations for
+    HPC Workloads").  The noise draw is keyed by the full point
+    identity, so the same probe replays bit-identically everywhere."""
+    import hashlib
+
+    import numpy as np
+
+    base = eval_offline(params, context)
+    ident = json.dumps([
+        int(context.get("dataset_seed", 0)), params["workload"],
+        params["target"], params["provider"],
+        sorted(tuple(kv) for kv in params["config"])], sort_keys=True)
+    digest = hashlib.sha256(ident.encode()).digest()
+    rng = np.random.default_rng(
+        int.from_bytes(digest[:8], "big", signed=False))
+    noise = float(np.exp(float(params["proxy_sigma"]) * rng.standard_normal()))
+    return {"value": float(base["value"]) * noise,
+            "true_value": base["value"], "noise": noise}
+
+
+# ---------------------------------------------------------------------------
 # Builtin: compile_cost — roofline-scored XLA compile (seconds/eval)
 # ---------------------------------------------------------------------------
 def _sharding_domain(params: Dict[str, Any]):
@@ -328,6 +447,11 @@ def _sharding_domain(params: Dict[str, Any]):
     from repro.tuner.strategies import sharding_domain
     return sharding_domain(get_config(params["arch"]),
                            get_shape(params["shape"]))
+
+
+def _kernel_domain(params: Dict[str, Any]):
+    from repro.kernels.bench import kernel_domain
+    return kernel_domain(params["preset"])
 
 
 # ---------------------------------------------------------------------------
@@ -397,25 +521,32 @@ def eval_dryrun(params: Dict[str, Any], context: Dict[str, Any]) -> dict:
 
 
 def _register_builtins() -> None:
+    # the "offline" ladder: cheap noisy probe -> exact table lookup.
+    # The top rung is the pre-registry objective, byte-identical keys.
     register_objective(
         "offline", "repro.core.objectives:eval_offline",
         domain_factory=_offline_domain,
         params=("workload", "target", "dataset_seed"),
         defaults={"dataset_seed": 0},
         context_params=("dataset_seed",),
-        tags=("table", "paper"))
+        tags=("table", "paper"),
+        family="offline", rung=None)
+    # the "sharding" ladder: analytic roofline estimate (~free) ->
+    # roofline-scored XLA compile (seconds) -> full dryrun (minutes)
     register_objective(
         "compile_cost", "repro.tuner.objective:eval_compile_cost",
         domain_factory=_sharding_domain,
         params=("arch", "shape", "mesh"),
         defaults={"mesh": "pod"},
-        tags=("measured", "compile", "roofline"))
+        tags=("measured", "compile", "roofline"),
+        family="sharding", rung=1)
     register_objective(
         "dryrun", "repro.core.objectives:eval_dryrun",
         domain_factory=_sharding_domain,
         params=("arch", "shape", "mesh"),
         defaults={"mesh": "pod"},
-        tags=("measured", "compile", "subprocess"))
+        tags=("measured", "compile", "subprocess"),
+        family="sharding", rung=None)
     # the offline table seen through a moving market: per-request units
     # additionally carry the clock tick (see MarketOverlay / drive_units'
     # clock hook), and an outage/revocation returns the structured
@@ -429,3 +560,34 @@ def _register_builtins() -> None:
                   "walk_sigma": 0.0, "schedule": ""},
         context_params=("dataset_seed",),
         tags=("dynamic", "market"))
+    register_objective(
+        "hlo_cost", "repro.tuner.objective:eval_sharding_analytic",
+        domain_factory=_sharding_domain,
+        params=("arch", "shape", "mesh"),
+        defaults={"mesh": "pod"},
+        tags=("analytic", "roofline"),
+        family="sharding", rung=0)
+    register_objective(
+        "offline_proxy", "repro.core.objectives:eval_offline_proxy",
+        domain_factory=_offline_domain,
+        params=("workload", "target", "dataset_seed", "proxy_sigma"),
+        defaults={"dataset_seed": 0, "proxy_sigma": 0.25},
+        context_params=("dataset_seed",),
+        tags=("proxy", "paper"),
+        family="offline", rung=0)
+    # the "kernel" ladder: analytic traffic/grid model -> measured
+    # wall time of the pallas kernels (repro.kernels.bench)
+    register_objective(
+        "kernel_analytic", "repro.kernels.bench:eval_kernel_analytic",
+        domain_factory=_kernel_domain,
+        params=("preset",),
+        defaults={"preset": "small"},
+        tags=("analytic", "kernel"),
+        family="kernel", rung=0)
+    register_objective(
+        "kernel_time", "repro.kernels.bench:eval_kernel_time",
+        domain_factory=_kernel_domain,
+        params=("preset", "reps"),
+        defaults={"preset": "small", "reps": 5},
+        tags=("timing", "kernel"),
+        family="kernel", rung=None)

@@ -130,6 +130,25 @@ def _normalize_cells(engine: ExperimentEngine,
     return out
 
 
+def _request_unit(binding: Any, req: Sequence) -> WorkUnit:
+    """Mint the unit for one ask request.  Plain ``(provider, config)``
+    requests go through ``binding.unit`` — the historical path, byte-
+    identical keys.  Rung-tagged ``(provider, config, rung)`` requests
+    (multi-fidelity drivers) need a :class:`~repro.core.fidelity.
+    LadderBinding`; tagging a flat binding is a driver/binding wiring
+    bug and raises instead of silently evaluating ground truth."""
+    if len(req) == 2:
+        return binding.unit(req[0], req[1])
+    prov, cfg, rung = req
+    rung_unit = getattr(binding, "rung_unit", None)
+    if rung_unit is None:
+        raise TypeError(
+            f"driver asked for fidelity rung {rung} but binding "
+            f"{binding.describe()} is not a ladder; bind the objective "
+            f"family via repro.core.fidelity.bind_ladder")
+    return rung_unit(rung, prov, cfg)
+
+
 def drive_units(engine: ExperimentEngine,
                 cells: Sequence[DriveCell], *,
                 clock: Any = None, on_failure: str = "raise",
@@ -138,16 +157,26 @@ def drive_units(engine: ExperimentEngine,
     granularity.
 
     ``cells`` is a sequence of ``(driver, binding)`` pairs — any
-    registered objective bound to concrete parameters — or legacy
-    ``(driver, workload, target)`` triples, which mean the offline
-    table at the engine's dataset seed.  Each iteration gathers one
-    ``ask_batch`` from every unfinished driver, submits the union as
-    ``eval`` units through the engine — which dedups identical requests
-    within the round, replays already-stored evaluations, and fans the
-    rest out through its executor backend — then tells each driver its
-    results in request order.  Driver state machines are deterministic,
-    so histories are bit-identical to the inline closed loop regardless
-    of executor, worker count, or store warmth.
+    registered objective bound to concrete parameters, including a
+    :class:`~repro.core.fidelity.LadderBinding` for multi-fidelity
+    drivers — or legacy ``(driver, workload, target)`` triples, which
+    mean the offline table at the engine's dataset seed.  Each
+    iteration gathers one ``ask_batch`` from every unfinished driver,
+    submits the union as ``eval`` units through the engine — which
+    dedups identical requests within the round, replays already-stored
+    evaluations, and fans the rest out through its executor backend —
+    then tells each driver its results in request order.  Driver state
+    machines are deterministic, so histories are bit-identical to the
+    inline closed loop regardless of executor, worker count, or store
+    warmth.
+
+    Ask requests are ``(provider, config)`` pairs, or ``(provider,
+    config, rung)`` triples from fidelity-aware drivers — the rung
+    indexes the ladder binding's rungs (0 = cheapest) and selects
+    which objective evaluates the point.  Before the first ask, any
+    driver exposing ``attach_ladder`` is told its binding's rung count
+    (1 for flat bindings), so multi-fidelity drivers fail fast when
+    wired to a flat objective.
 
     ``clock``, if given, is advanced (``clock.advance()``) once after
     every round — the dynamic-market time axis (:class:`repro.
@@ -178,6 +207,13 @@ def drive_units(engine: ExperimentEngine,
     # lazy: keeps `import repro.exp` light for workers/CLI processes
     from repro.core.objectives import EvalFailure
     pairs = _normalize_cells(engine, cells)
+    # fidelity handshake: a driver exposing attach_ladder learns the
+    # ladder shape before its first ask; against a flat binding it is
+    # told n_rungs=1, so it fails loudly instead of silently flat
+    for drv, binding in pairs:
+        attach = getattr(drv, "attach_ladder", None)
+        if attach is not None:
+            attach(getattr(binding, "n_rungs", 1))
     agg = EngineStats()
     pending: Dict[int, list] = {}
     active = [i for i, (drv, _b) in enumerate(pairs) if not drv.done]
@@ -188,7 +224,7 @@ def drive_units(engine: ExperimentEngine,
             drv, binding = pairs[i]
             batch = drv.ask_batch()
             pending[i] = batch
-            units.extend(binding.unit(prov, cfg) for prov, cfg in batch)
+            units.extend(_request_unit(binding, req) for req in batch)
         results = engine.run(units)
         agg.absorb(engine.stats)
         pos = 0
@@ -197,7 +233,8 @@ def drive_units(engine: ExperimentEngine,
             drv, binding = pairs[i]
             batch = pending.pop(i)
             values = []
-            for prov, _cfg in batch:
+            for req in batch:
+                prov = req[0]
                 res = results[pos]
                 pos += 1
                 if res is None:

@@ -105,6 +105,64 @@ def _objective_for(arch: str, shape: str, mesh: str) -> CompileCostObjective:
         make_production_mesh(multi_pod=(mesh == "multipod")))
 
 
+#: rough per-strategy collective traffic, in units of one full
+#: parameter-set transfer over ICI per step — the term that separates
+#: the strategy families before any HLO exists
+_STRATEGY_TRAFFIC = {
+    "fsdp_tp": 2.0,         # param all-gather + grad reduce-scatter
+    "fsdp_tp_nosp": 2.4,    # same, plus unsharded-activation all-reduces
+    "fsdp_dp": 3.0,         # pure-DP grad all-reduce dominates
+    "ddp_tp": 4.0,          # replicated params: full grad all-reduce
+    "tp_serve": 0.6,        # activation collectives only
+}
+
+#: recompute multiplier per remat policy (flops actually executed)
+_REMAT_FLOPS = {"full": 4.0 / 3.0, "dots": 1.15, "none": 1.0}
+
+
+def eval_sharding_analytic(params: Dict[str, Any],
+                           context: Dict[str, Any]) -> dict:
+    """The ``hlo_cost`` objective: rung 0 of the sharding ladder.
+
+    A compile-free roofline sketch — model FLOPs over peak compute,
+    plus a per-strategy collective-traffic term and coarse config
+    multipliers (remat recompute, chunking overhead).  Deliberately a
+    *ranking* model, not a timing model: it costs microseconds, never
+    touches XLA, and only needs to correlate with ``compile_cost`` well
+    enough to screen candidates before real compiles are spent.
+    """
+    from repro.analysis.roofline import model_flops_estimate
+    from repro.configs import get_config, get_shape
+
+    cfg = get_config(params["arch"])
+    shape = get_shape(params["shape"])
+    chips = 512 if params.get("mesh", "pod") == "multipod" else 256
+    strategy = params["provider"]
+    config = dict(params["config"])
+    if strategy not in _STRATEGY_TRAFFIC:
+        raise ValueError(
+            f"hlo_cost: unknown strategy {strategy!r}; knows "
+            f"{sorted(_STRATEGY_TRAFFIC)}")
+    flops = model_flops_estimate(cfg, shape)
+    flops *= _REMAT_FLOPS.get(str(config.get("remat", "none")), 1.0)
+    if config.get("banded_local") and cfg.sliding_window:
+        flops *= 0.92                   # banded local layers skip far keys
+    # chunked attention / CE re-launch overhead: small, favors the
+    # incumbent chunk sizes over tiny chunks
+    overhead = 1.0
+    if "attn_chunk" in config:
+        overhead *= 1.0 + 16.0 / max(int(config["attn_chunk"]), 1)
+    if "ce_chunk" in config:
+        overhead *= 1.0 + 16.0 / max(int(config["ce_chunk"]), 1)
+    t_compute = flops / (chips * HW["peak_flops"]) * overhead
+    param_bytes = 2.0 * cfg.n_params()
+    t_comms = _STRATEGY_TRAFFIC[strategy] * param_bytes / \
+        (chips * HW["ici_bw"])
+    t = t_compute + t_comms
+    return {"value": float(t), "t_compute": float(t_compute),
+            "t_comms": float(t_comms), "flops": float(flops)}
+
+
 def eval_compile_cost(params: Dict[str, Any],
                       context: Dict[str, Any]) -> dict:
     """Evaluate one (provider, config) candidate for the ``compile_cost``

@@ -63,16 +63,17 @@ def test_registry_order_is_paper_order():
 
 def test_budget_coupled_view():
     assert set(BUDGET_COUPLED) == {"rb", "cb_cherrypick", "cb_rbfopt",
-                                   "cb_drift", "rb_drift"}
-    assert len(BUDGET_COUPLED) == 5
+                                   "cb_drift", "rb_drift", "mf_sh",
+                                   "mf_prefilter"}
+    assert len(BUDGET_COUPLED) == 7
     assert "rb" in BUDGET_COUPLED
     assert "random" not in BUDGET_COUPLED
     assert "nonexistent" not in BUDGET_COUPLED
     assert is_budget_coupled("cb_rbfopt") and not is_budget_coupled("smac")
-    # the drift-aware variants are registered but stay out of the
-    # paper's closed SEARCH_METHODS set
-    assert "cb_drift" not in SEARCH_METHODS
-    assert "rb_drift" not in SEARCH_METHODS
+    # the drift-aware and multi-fidelity variants are registered but
+    # stay out of the paper's closed SEARCH_METHODS set
+    for extra in ("cb_drift", "rb_drift", "mf_sh", "mf_prefilter"):
+        assert extra not in SEARCH_METHODS
 
 
 def test_registry_unknown_method():

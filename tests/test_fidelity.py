@@ -1,0 +1,431 @@
+"""Multi-fidelity search: ladders, drivers, keys, and the timing harness.
+
+The contracts under test:
+
+- Fidelity is a *key-stable* axis: top-rung (ground-truth) units are
+  byte-identical to the flat single-fidelity world — pre-fidelity
+  stores replay with ``computed=0`` — and only reduced rungs stamp a
+  ``fidelity`` field.
+- ``mf_sh`` / ``mf_prefilter`` are deterministic suspendable drivers:
+  bit-identical histories serial vs threaded, cold vs warm, and they
+  fail loudly when wired to a flat (ladder-less) binding.
+- The prefilter only ever *measures* points its inner driver asked for
+  (the subset property the CI leg gates on).
+- :func:`repro.kernels.bench.time_fn` is the fixed harness: monotonic
+  ``perf_counter`` (never ``time.time``), warm-up synchronized before
+  the first timed rep, median-of-reps.
+"""
+import types
+
+import pytest
+
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.fidelity import (
+    LadderBinding, PrefilterDriver, SuccessiveHalvingDriver, bind_ladder)
+from repro.core.objectives import (
+    bind_objective, fidelity_ladder, objective_families,
+    register_objective)
+from repro.core.registry import get_method, method_names
+from repro.exp import make_objective_engine
+from repro.exp.runners import _request_unit, drive_units, eval_unit
+from repro.kernels import bench
+from repro.multicloud import build_dataset
+
+BUDGET = 33
+SEED = 3
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+def _engine(tmp_path, name="units.jsonl", dataset_seed=0, **kw):
+    return make_objective_engine(context={"dataset_seed": dataset_seed},
+                                 store_path=str(tmp_path / name), **kw)
+
+
+def _offline_ladder(ds, workload):
+    return bind_ladder("offline", workload=workload, target="cost",
+                       dataset_seed=int(ds.seed))
+
+
+# ---------------------------------------------------------------------------
+# registry: the fidelity axis
+# ---------------------------------------------------------------------------
+def test_builtin_ladders():
+    assert set(objective_families()) >= {"offline", "sharding", "kernel"}
+    assert [s.name for s in fidelity_ladder("offline")] \
+        == ["offline_proxy", "offline"]
+    assert [s.name for s in fidelity_ladder("sharding")] \
+        == ["hlo_cost", "compile_cost", "dryrun"]
+    assert [s.name for s in fidelity_ladder("kernel")] \
+        == ["kernel_analytic", "kernel_time"]
+    for fam in ("offline", "sharding", "kernel"):
+        rungs = fidelity_ladder(fam)
+        assert rungs[-1].is_top_rung
+        assert all(not s.is_top_rung for s in rungs[:-1])
+
+
+def test_fidelity_ladder_unknown_family():
+    with pytest.raises(KeyError, match="unknown objective family"):
+        fidelity_ladder("carbon")
+
+
+def test_rung_registration_validation():
+    with pytest.raises(ValueError, match="without a family"):
+        register_objective(
+            "bad_rung", "tests.test_objectives:eval_synth",
+            domain_factory=lambda p: None, rung=0)
+    with pytest.raises(ValueError, match="non-negative int"):
+        register_objective(
+            "bad_rung", "tests.test_objectives:eval_synth",
+            domain_factory=lambda p: None, family="f", rung=-1)
+    with pytest.raises(ValueError, match="already has its rung 0"):
+        register_objective(
+            "bad_rung", "tests.test_objectives:eval_synth",
+            domain_factory=lambda p: None, family="offline", rung=0)
+    with pytest.raises(ValueError, match="already has its top rung"):
+        register_objective(
+            "bad_rung", "tests.test_objectives:eval_synth",
+            domain_factory=lambda p: None, family="offline")
+
+
+def test_incomplete_family_is_not_a_ladder():
+    register_objective(
+        "lonely_low", "tests.test_objectives:eval_synth",
+        domain_factory=lambda p: None, family="lonely", rung=0)
+    with pytest.raises(ValueError, match="no top rung"):
+        fidelity_ladder("lonely")
+    register_objective(
+        "solo_top", "tests.test_objectives:eval_synth",
+        domain_factory=lambda p: None, family="solo")
+    with pytest.raises(ValueError, match="one-rung ladder"):
+        fidelity_ladder("solo")
+
+
+# ---------------------------------------------------------------------------
+# content keys: top rung == flat world, reduced rungs stamped
+# ---------------------------------------------------------------------------
+def test_top_rung_units_keep_flat_keys(ds):
+    lad = _offline_ladder(ds, "kmeans@buzz")
+    cfg = {"nodes": 2, "family": "m4"}
+    # the ladder's ground truth is the pre-registry eval unit, bit for bit
+    assert lad.unit("aws", cfg) == eval_unit("kmeans@buzz", "cost",
+                                             "aws", cfg)
+    assert lad.rung_unit(lad.n_rungs - 1, "aws", cfg) == lad.unit("aws", cfg)
+    assert "fidelity" not in dict(lad.unit("aws", cfg).params)
+    # kernel_time is a top rung too: objective field, no fidelity field
+    klad = bind_ladder("kernel", preset="tiny", reps=3)
+    kp = dict(klad.unit("ssd_scan", {"chunk": 64}).params)
+    assert kp["objective"] == "kernel_time" and "fidelity" not in kp
+    assert kp == dict(bind_objective(
+        "kernel_time", preset="tiny", reps=3).unit(
+            "ssd_scan", {"chunk": 64}).params)
+
+
+def test_reduced_rung_units_carry_fidelity(ds):
+    lad = _offline_ladder(ds, "kmeans@buzz")
+    cfg = {"nodes": 2, "family": "m4"}
+    low = dict(lad.rung_unit(0, "aws", cfg).params)
+    assert low["objective"] == "offline_proxy" and low["fidelity"] == 0
+    klad = bind_ladder("kernel", preset="tiny", reps=3)
+    kl = dict(klad.rung_unit(0, "ssd_scan", {"chunk": 64}).params)
+    assert kl["objective"] == "kernel_analytic" and kl["fidelity"] == 0
+    # the analytic rung accepts no reps: measurement protocol is
+    # top-rung identity only
+    assert "reps" not in kl
+    mid = bind_objective("compile_cost", arch="qwen1.5-4b",
+                         shape="train_4k")
+    assert dict(mid.unit("fsdp_tp", {"remat": "dots"}).params)[
+        "fidelity"] == 1
+
+
+def test_ladder_binding_shape(ds):
+    lad = _offline_ladder(ds, "kmeans@buzz")
+    assert lad.n_rungs == 2
+    assert lad.describe() == "ladder[offline_proxy -> offline]"
+    assert lad.context() == {"dataset_seed": int(ds.seed)}
+    assert lad.param("target") == "cost"
+    assert lad.make_domain().provider_names \
+        == lad.top.make_domain().provider_names
+    with pytest.raises(IndexError, match="out of range"):
+        lad.rung_unit(2, "aws", {})
+    with pytest.raises(ValueError, match="unknown param"):
+        bind_ladder("offline", workload="kmeans@buzz", target="cost",
+                    preset="tiny")
+    with pytest.raises(KeyError):
+        lad.param("preset")
+
+
+def test_ladder_binding_validation(ds):
+    top = bind_objective("offline", workload="kmeans@buzz", target="cost")
+    proxy = bind_objective("offline_proxy", workload="kmeans@buzz",
+                           target="cost")
+    with pytest.raises(ValueError, match="at least 2 rungs"):
+        LadderBinding((top,))
+    with pytest.raises(ValueError, match="not the\n?.*family top|not the "
+                       "family top"):
+        LadderBinding((proxy, proxy))
+    ktop = bind_objective("kernel_time", preset="tiny")
+    with pytest.raises(ValueError, match="share one family"):
+        LadderBinding((proxy, ktop))
+    # rungs disagreeing on engine context is a wiring bug, not a merge
+    proxy7 = bind_objective("offline_proxy", workload="kmeans@buzz",
+                            target="cost", dataset_seed=7)
+    with pytest.raises(ValueError, match="disagree on context"):
+        LadderBinding((proxy7, top)).context()
+
+
+def test_rung_request_on_flat_binding_raises(ds):
+    flat = bind_objective("offline", workload="kmeans@buzz", target="cost")
+    assert _request_unit(flat, ("aws", {"nodes": 2, "family": "m4"})) \
+        == flat.unit("aws", {"nodes": 2, "family": "m4"})
+    with pytest.raises(TypeError, match="not a ladder"):
+        _request_unit(flat, ("aws", {"nodes": 2}, 0))
+
+
+# ---------------------------------------------------------------------------
+# drivers: registration, flat-binding refusal, schedule
+# ---------------------------------------------------------------------------
+def test_mf_methods_registered_outside_search_set():
+    assert set(method_names(tag="fidelity")) == {"mf_sh", "mf_prefilter"}
+    assert "mf_sh" not in method_names(tag="search")
+    assert get_method("mf_sh").budget_coupled
+    assert get_method("mf_prefilter").budget_coupled
+
+
+@pytest.mark.parametrize("method", ("mf_sh", "mf_prefilter"))
+def test_mf_driver_refuses_flat_binding(method, ds, tmp_path):
+    flat = bind_objective("offline", workload=ds.workloads[0],
+                          target="cost", dataset_seed=int(ds.seed))
+    drv = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                         target="cost")
+    with pytest.raises(ValueError, match="needs a fidelity ladder"):
+        drive_units(_engine(tmp_path, dataset_seed=int(ds.seed)),
+                    [(drv, flat)])
+
+
+def test_mf_driver_asked_without_ladder_raises(ds):
+    drv = SuccessiveHalvingDriver(ds.domain, BUDGET)
+    with pytest.raises(RuntimeError, match="before a ladder"):
+        drv.ask_batch()
+    pre = PrefilterDriver(get_method("smac").make_driver(
+        ds.domain, BUDGET, SEED, target="cost"))
+    with pytest.raises(RuntimeError, match="before a ladder"):
+        pre.ask_batch()
+    with pytest.raises(ValueError, match="eta must be > 1"):
+        SuccessiveHalvingDriver(ds.domain, BUDGET, eta=1.0)
+    with pytest.raises(ValueError, match="ratio must be >= 1"):
+        PrefilterDriver(drv, ratio=0.5)
+
+
+def test_sh_schedule_and_spend(ds, tmp_path):
+    lad = _offline_ladder(ds, ds.workloads[0])
+    drv = get_method("mf_sh").make_driver(ds.domain, BUDGET, SEED,
+                                          target="cost")
+    drive_units(_engine(tmp_path, dataset_seed=int(ds.seed)), [(drv, lad)])
+    grid = ds.domain.size()
+    # bottom rung sweeps the grid; ~budget/eta survivors reach the truth
+    assert drv.spend == {0: grid, 1: round(BUDGET / 3.0)}
+    assert len(drv.history.values) == round(BUDGET / 3.0)
+    prov, _cfg, loss, hist = drv.result()
+    assert loss == min(hist.values)
+    assert prov in ds.domain.provider_names
+
+
+def test_sh_finds_table_optimum_with_fraction_of_truth_budget(ds, tmp_path):
+    """The tentpole's headline property on the offline ladder: the
+    known table optimum at ~budget/eta ground-truth measurements."""
+    task = ds.task(ds.workloads[0], "cost")
+    lad = _offline_ladder(ds, ds.workloads[0])
+    drv = get_method("mf_sh").make_driver(ds.domain, BUDGET, SEED,
+                                          target="cost")
+    drive_units(_engine(tmp_path, dataset_seed=int(ds.seed)), [(drv, lad)])
+    _p, _c, loss, _h = drv.result()
+    assert (loss - task.true_min) / task.true_min < 0.05
+    assert drv.spend[1] <= BUDGET // 2
+
+
+def test_prefilter_measures_only_inner_asks(ds, tmp_path):
+    """The CI gate's subset property: every ground-truth measurement the
+    prefilter pays for is a point its inner driver requested."""
+    lad = _offline_ladder(ds, ds.workloads[1])
+    drv = get_method("mf_prefilter").make_driver(ds.domain, BUDGET, SEED,
+                                                 target="cost")
+    drive_units(_engine(tmp_path, dataset_seed=int(ds.seed)), [(drv, lad)])
+    inner_pts = {(p, tuple(sorted(c.items())))
+                 for p, c in drv.inner.history.points}
+    measured = {(p, tuple(sorted(c.items())))
+                for p, c in drv.history.points}
+    assert measured and measured <= inner_pts
+    # screening actually happened, and estimates stay out of history
+    assert drv.screened > 0
+    assert drv.spend[drv.n_rungs - 1] == len(drv.history.values)
+    assert drv.spend[drv.n_rungs - 1] < len(drv.inner.history.values)
+    assert drv.spend[0] == len(drv.inner.history.values)
+
+
+# ---------------------------------------------------------------------------
+# determinism: serial == thread, cold == warm (computed=0)
+# ---------------------------------------------------------------------------
+def _run_cell(method, ds, tmp_path, name, **engine_kw):
+    lad = _offline_ladder(ds, ds.workloads[0])
+    drv = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                         target="cost")
+    eng = _engine(tmp_path, name, dataset_seed=int(ds.seed), **engine_kw)
+    drive_units(eng, [(drv, lad)])
+    prov, cfg, loss, hist = drv.result()
+    trace = [(p, tuple(sorted(c.items())), v)
+             for (p, c), v in zip(hist.points, hist.values)]
+    return (prov, tuple(sorted(cfg.items())), loss, trace), eng
+
+
+@pytest.mark.parametrize("method", ("mf_sh", "mf_prefilter"))
+def test_mf_bit_identical_serial_thread_cold_warm(method, ds, tmp_path):
+    serial, eng1 = _run_cell(method, ds, tmp_path, "serial.jsonl")
+    assert eng1.lifetime.computed > 0
+    threaded, _ = _run_cell(method, ds, tmp_path, "thread.jsonl",
+                            executor="thread", workers=4)
+    assert threaded == serial
+    warm, eng3 = _run_cell(method, ds, tmp_path, "serial.jsonl")
+    assert warm == serial
+    assert eng3.lifetime.computed == 0 and eng3.lifetime.cached > 0
+
+
+def test_mf_top_rung_records_shared_with_flat_methods(ds, tmp_path):
+    """A flat search warming the store pre-pays the mf drivers' ground
+    truth: same content keys, so the mf run only computes probes."""
+    w = ds.workloads[0]
+    flat = bind_objective("offline", workload=w, target="cost",
+                          dataset_seed=int(ds.seed))
+    eng = _engine(tmp_path, dataset_seed=int(ds.seed))
+    eng.run([flat.unit(p, c) for p, c in ds.domain.all_candidates()])
+    assert eng.lifetime.computed == ds.domain.size()
+
+    eng2 = _engine(tmp_path, dataset_seed=int(ds.seed))
+    drv = get_method("mf_sh").make_driver(ds.domain, BUDGET, SEED,
+                                          target="cost")
+    drive_units(eng2, [(drv, _offline_ladder(ds, w))])
+    # exactly the proxy sweep was new; every truth eval was a cache hit
+    assert eng2.lifetime.computed == drv.spend[0]
+    assert eng2.lifetime.cached == drv.spend[1]
+
+
+# ---------------------------------------------------------------------------
+# kernel domain + the fixed timing harness
+# ---------------------------------------------------------------------------
+def test_kernel_domain_shape():
+    dom = bench.kernel_domain("tiny")
+    assert dom.provider_names == ("flash_attention", "decode_attention",
+                                  "ssd_scan")
+    assert dom.size() == 15                     # 9 + 3 + 3
+    with pytest.raises(KeyError, match="unknown kernel preset"):
+        bench.kernel_domain("huge")
+
+
+def test_kernel_analytic_rung_is_deterministic_and_sane():
+    lo = bench.eval_kernel_analytic(
+        {"provider": "flash_attention", "preset": "tiny",
+         "config": (("bq", 128), ("bk", 128))}, {})
+    hi = bench.eval_kernel_analytic(
+        {"provider": "flash_attention", "preset": "tiny",
+         "config": (("bq", 32), ("bk", 32))}, {})
+    # same work, 16x the grid steps => strictly costlier estimate
+    assert hi["grid_steps"] == 16 * lo["grid_steps"]
+    assert hi["value"] > lo["value"] > 0
+    again = bench.eval_kernel_analytic(
+        {"provider": "flash_attention", "preset": "tiny",
+         "config": (("bq", 32), ("bk", 32))}, {})
+    assert again == hi
+
+
+def test_kernel_time_rung_measures_and_validates():
+    r = bench.eval_kernel_time(
+        {"provider": "ssd_scan", "preset": "tiny", "reps": 2,
+         "config": (("chunk", 128),)}, {})
+    assert r["value"] == r["kernel_us"] > 0
+    assert r["ratio"] == pytest.approx(r["kernel_us"] / r["ref_us"])
+    assert r["maxerr"] < 2e-2
+
+
+def test_time_fn_uses_perf_counter_and_synced_warmup(monkeypatch):
+    """The two bugs the harness fix removed, as regressions: a timer
+    must never be ``time.time`` (wall-clock, low-res, can step back),
+    and the warm-up must fully retire before the first timed rep."""
+    import jax
+    events = []
+    clock = iter(range(100))
+
+    def perf_counter():
+        events.append("tick")
+        return float(next(clock))
+
+    def wall_time():
+        raise AssertionError("time.time() used in the timing harness")
+
+    fake_time = types.SimpleNamespace(perf_counter=perf_counter,
+                                      time=wall_time)
+    monkeypatch.setattr(bench, "time", fake_time)
+    real_block = jax.block_until_ready
+    monkeypatch.setattr(jax, "block_until_ready",
+                        lambda x: events.append("block") or real_block(x))
+    out = bench.time_fn(lambda: 0, reps=3)
+    # warm-up blocks before any timer starts; each rep is block-timed
+    assert events[0] == "block"
+    assert events.count("block") == 4 and events.count("tick") == 6
+    assert events == ["block"] + ["tick", "block", "tick"] * 3
+    assert out == 1.0 * 1e6                     # every scripted rep: 1s
+
+
+def test_time_fn_reports_median_not_mean(monkeypatch):
+    ticks = iter([0.0, 10.0, 100.0, 120.0, 200.0, 1000200.0])
+    fake_time = types.SimpleNamespace(perf_counter=lambda: next(ticks))
+    monkeypatch.setattr(bench, "time", fake_time)
+    # durations 10s, 20s, 1e6s: the outlier must not skew the result
+    assert bench.time_fn(lambda: 0, reps=3) == 20.0 * 1e6
+
+    ticks = iter([0.0, 1.0, 10.0, 12.0, 20.0, 23.0, 30.0, 130.0])
+    fake_time = types.SimpleNamespace(perf_counter=lambda: next(ticks))
+    monkeypatch.setattr(bench, "time", fake_time)
+    # even rep count: mean of the middle pair (2s, 3s)
+    assert bench.time_fn(lambda: 0, reps=4) == 2.5 * 1e6
+
+
+def test_benchmark_kernels_uses_fixed_harness():
+    from benchmarks import kernels
+    assert kernels.time_fn is bench.time_fn
+    assert kernels._time.__module__ == "benchmarks.kernels"
+    assert 0 < kernels.REPS_QUICK < kernels.REPS_FULL
+
+
+def test_benchmark_csv_cache_keyed_by_variant(tmp_path, monkeypatch):
+    """--quick tables must never masquerade as full runs: the CSV cache
+    is keyed by variant, and an unkeyed name stays bare (back compat)."""
+    from benchmarks import common
+    monkeypatch.setattr(common, "OUT_DIR", str(tmp_path))
+    assert common.out_path("kernels").endswith("kernels.csv")
+    assert common.out_path("kernels", variant="quick").endswith(
+        "kernels.quick.csv")
+    header = ("name", "us_per_call", "derived")
+    common.write_rows("kernels", header, [["full", "1", "x"]])
+    common.write_rows("kernels", header, [["quick", "2", "y"]],
+                      variant="quick")
+    assert common.cached("kernels") == [["full", "1", "x"]]
+    assert common.cached("kernels", variant="quick") == [["quick", "2", "y"]]
+    assert common.cached("kernels", variant="nope") == []
+
+
+def test_kernel_ladder_search_end_to_end(tmp_path):
+    """mf_sh over the kernel config space through the engine: the
+    analytic sweep prunes to ~budget/eta measured candidates, and the
+    measured optimum is reported in absolute microseconds."""
+    lad = bind_ladder("kernel", preset="tiny", reps=2)
+    dom = lad.make_domain()
+    drv = get_method("mf_sh").make_driver(dom, 6, 0, target="time")
+    eng = make_objective_engine(store_path=str(tmp_path / "k.jsonl"))
+    drive_units(eng, [(drv, lad)])
+    assert drv.spend == {0: dom.size(), 1: 2}
+    prov, cfg, loss, _h = drv.result()
+    assert prov in dom.provider_names and loss > 0
+    assert (prov, cfg) in [tuple(pc) for pc in dom.all_candidates()]

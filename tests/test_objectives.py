@@ -87,6 +87,41 @@ def test_tag_filter():
     assert "synthetic" in objective_names(tag="test")
 
 
+def test_fidelity_rung_tags_and_slots():
+    """The ladder builtins ride the existing tag/registry surface: new
+    rungs never leak into the pinned table/measured tag sets."""
+    assert objective_names(tag="table") == ("offline",)
+    assert objective_names(tag="measured") == ("compile_cost", "dryrun")
+    assert set(objective_names(tag="analytic")) \
+        == {"hlo_cost", "kernel_analytic"}
+    assert get_objective("offline_proxy").family == "offline"
+    assert get_objective("offline_proxy").rung == 0
+    assert get_objective("offline").rung is None
+    assert get_objective("hlo_cost").rung == 0
+    assert get_objective("compile_cost").rung == 1
+    assert get_objective("kernel_time").is_top_rung
+
+
+def test_offline_proxy_is_deterministic_noise_on_truth():
+    params = {"workload": "kmeans@buzz", "target": "cost",
+              "provider": "aws", "proxy_sigma": 0.25,
+              "config": (("family", "m4"), ("nodes", 2),
+                         ("size", "large"))}
+    truth = obj_mod.eval_offline(params, {"dataset_seed": 0})
+    probe = obj_mod.eval_offline_proxy(params, {"dataset_seed": 0})
+    assert probe["true_value"] == truth["value"]
+    assert probe["value"] == pytest.approx(
+        truth["value"] * probe["noise"])
+    assert probe["noise"] != 1.0
+    # same point => same noise draw, everywhere, every process
+    again = obj_mod.eval_offline_proxy(params, {"dataset_seed": 0})
+    assert again == probe
+    # ... and the draw is keyed by the full point identity
+    other = obj_mod.eval_offline_proxy(
+        {**params, "workload": "xgboost@credit"}, {"dataset_seed": 0})
+    assert other["noise"] != probe["noise"]
+
+
 def test_unknown_objective():
     with pytest.raises(KeyError, match="unknown objective"):
         get_objective("carbon")

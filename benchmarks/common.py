@@ -40,12 +40,12 @@ def figure_engine(dataset, workers: int = 1, store=None,
     selectable executor backend (serial/thread/process/remote, with
     ``hosts`` for remote transports), and the engine's fault-tolerance
     budget (``timeout`` per unit, ``retries`` extra attempts)."""
-    from repro.exp import make_engine
-    return make_engine(dataset, workers=workers, executor=executor,
-                       executor_kwargs={"hosts": hosts} if hosts else None,
-                       unit_timeout_s=timeout, retries=retries,
-                       store=store if store is not None
-                       else unit_store(store_dir))
+    from repro.exp import experiment_engine
+    return experiment_engine(
+        dataset=dataset, workers=workers, executor=executor,
+        executor_kwargs={"hosts": hosts} if hosts else None,
+        unit_timeout_s=timeout, retries=retries,
+        store=store if store is not None else unit_store(store_dir))
 
 
 def check_methods_registered(methods) -> None:

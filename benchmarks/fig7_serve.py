@@ -1,0 +1,285 @@
+"""Fig. 7 — always-on serving: continuous vs lockstep batching + router.
+
+A seeded load generator produces a mixed-length request stream (short
+and long prompts, short and long generations) and serves it two ways on
+the same reduced dense model:
+
+``lockstep``
+    Static epoch batching — consecutive closed batches of ``B`` requests
+    through :class:`~repro.runtime.serve.LockstepServer`, resetting
+    between epochs.  An epoch runs as long as its longest request, and
+    results ship when the epoch ends (head-of-line blocking is the
+    point).
+``continuous``
+    :class:`~repro.runtime.serve.BatchedServer`'s streaming API — every
+    request is submitted up-front, slots free the moment a request
+    finishes and the next queued request is admitted at position 0 on
+    the very next step.
+
+Latency is measured on the decode-step clock (deterministic — the SLO
+assertions cannot flake on machine load) with wall-clock tokens/s
+alongside.  Greedy outputs are per-slot-independent, so both modes
+generate identical token streams; the figure is purely about steps.
+SLOs asserted per batch size: every request served, continuous
+tokens/step >= lockstep tokens/step on the mixed workload, continuous
+p99 step-latency <= lockstep p99.  The full (non-quick) run adds a
+flash-decode kernel leg (``use_kernel=True``) and asserts its token
+streams match the reference path bit-for-bit.
+
+The router leg drives :class:`~repro.runtime.router.ConfigRouter`
+against the offline dataset through a market overlay with a mid-run
+provider outage: live request latencies flow back as driver tells, the
+outage is absorbed as structured failures (never an abort), and no
+request is routed to the dead provider while it is down.
+
+Outputs ``name,us_per_call,derived`` rows (us_per_call = wall us per
+decode step; derived = tokens per step), ``BENCH_serve.json`` at the
+repo root, and the per-request token streams under
+results/benchmarks/ for CI's two-run determinism diff.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import ROOT, OUT_DIR, emit, write_rows
+
+NAME = "fig7_serve"
+BENCH_PATH = os.path.join(ROOT, "BENCH_serve.json")
+
+LOAD_SEED = 0
+MAX_SEQ = 64
+ARCH = "qwen1.5-4b"                 # dense, no sliding window: kernel-eligible
+BATCH_SIZES = (2, 4, 8)
+N_REQUESTS = 48
+KERNEL_REQUESTS = 12                # interpret-mode Pallas: keep the leg short
+
+ROUTER_WORKLOAD_STRIDE = 7
+ROUTER_BUDGET = 26
+ROUTER_HORIZON = 48
+ROUTER_SCHEDULE = "outage:aws:3:9"  # aws dark for ask rounds [3, 9)
+ROUTER_REQUESTS = 60
+
+
+# ---------------------------------------------------------------------------
+# Seeded mixed-length load generator
+# ---------------------------------------------------------------------------
+def make_load(n: int, vocab: int, seed: int = LOAD_SEED):
+    """Request specs ``(rid, prompt, max_new_tokens)``: prompt lengths
+    2-12, generation lengths 4-24, interleaved so every epoch of any
+    batch size mixes short and long requests."""
+    from repro.runtime.serve import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = int(rng.integers(2, 13))
+        gen = int(rng.integers(4, 25))
+        prompt = [int(t) for t in rng.integers(1, vocab, size=plen)]
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=gen))
+    return reqs
+
+
+def serve_lockstep(model, params, reqs, batch_size: int, opts):
+    """Epoch serving: closed consecutive batches, reset between epochs.
+    A request's step-latency is its epoch's end on the cumulative step
+    clock — static batching ships results when the epoch ends."""
+    from repro.runtime.serve import LockstepServer
+    srv = LockstepServer(model, params, batch_size=batch_size,
+                         max_seq=MAX_SEQ, opts=opts)
+    results, latency = {}, {}
+    total_steps = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), batch_size):
+        srv.reset()
+        batch = reqs[i:i + batch_size]
+        results.update(srv.run(batch))
+        total_steps += srv.pos
+        for r in batch:
+            latency[r.rid] = total_steps
+    return results, latency, total_steps, time.perf_counter() - t0
+
+
+def serve_continuous(model, params, reqs, batch_size: int, opts,
+                     use_kernel: bool = False):
+    from repro.runtime.serve import BatchedServer
+    srv = BatchedServer(model, params, batch_size=batch_size,
+                        max_seq=MAX_SEQ, opts=opts, use_kernel=use_kernel)
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.submit(r)
+    results = srv.drain()
+    latency = {r.rid: r.finished - r.arrived for r in reqs}
+    return results, latency, srv.steps, time.perf_counter() - t0
+
+
+def _metrics(results, latency, steps, wall_s):
+    tokens = sum(len(v) for v in results.values())
+    lat = np.asarray(sorted(latency.values()), float)
+    return {
+        "requests": len(results),
+        "steps": int(steps),
+        "tokens": int(tokens),
+        "tokens_per_step": round(tokens / max(steps, 1), 4),
+        "wall_s": round(wall_s, 3),
+        "tokens_per_s": round(tokens / max(wall_s, 1e-9), 1),
+        "p50_steps": float(np.percentile(lat, 50)),
+        "p99_steps": float(np.percentile(lat, 99)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Router leg: search-backed routing through a provider outage
+# ---------------------------------------------------------------------------
+def run_router(quick: bool):
+    from repro.core.objectives import EvalFailure, bind_objective
+    from repro.core.registry import get_method
+    from repro.multicloud import build_dataset
+    from repro.multicloud.market import MarketClock, get_overlay
+    from repro.runtime.router import ConfigRouter
+
+    ds = build_dataset()
+    w = ds.workloads[::ROUTER_WORKLOAD_STRIDE][0]
+    task = ds.task(w, "cost")
+    overlay = get_overlay(0, ROUTER_HORIZON, 0.0, ROUTER_SCHEDULE)
+    clock = MarketClock()
+    router = ConfigRouter(overlay=overlay, clock=clock)
+    driver = get_method("cb_rbfopt").make_driver(
+        ds.domain, ROUTER_BUDGET, 0, target="cost")
+    router.register(w, driver, binding=bind_objective(
+        "offline", workload=w, target="cost", dataset_seed=int(ds.seed)))
+
+    n = ROUTER_REQUESTS // 2 if quick else ROUTER_REQUESTS
+    served = []
+    for _ in range(n):
+        d = router.route(w)
+        if overlay.available(d.tick, d.provider, d.config):
+            # the observed latency: that tick's market price of serving
+            # on the chosen backend
+            lat = overlay.value(d.tick, task.objective(d.provider, d.config),
+                                d.provider, "cost")
+            router.observe(d, lat)
+        else:                       # blind decision: backend died mid-serve
+            router.observe(d, EvalFailure(reason="backend down"))
+        served.append(d)
+
+    # SLOs: the service survived the outage without touching the dead
+    # provider, and live observations reached the driver as tells
+    assert len(served) == n, "router dropped requests"
+    lo, hi = 3, 9
+    in_outage = [d for d in served if lo <= d.tick < hi]
+    assert all(d.provider != "aws" or d.kind == "blind" for d in in_outage), \
+        "routed to a provider the market had down"
+    stats = router.stats(w)
+    assert stats["told"] > 0, "no live observations reached the driver"
+    kinds = {k: sum(1 for d in served if d.kind == k)
+             for k in ("explore", "exploit", "failover", "blind")}
+    return {
+        "workload": w, "budget": ROUTER_BUDGET,
+        "schedule": ROUTER_SCHEDULE, "requests": n,
+        "decisions": kinds, "outage_decisions": len(in_outage),
+        "best": list(router.best(w) or ()), **stats,
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(quick: bool = False):
+    import jax
+    from repro.configs import REGISTRY
+    from repro.models.blocks import ModelOpts
+    from repro.models.model import build_model
+
+    cfg = REGISTRY[ARCH].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opts = ModelOpts(attn_chunk=32, remat="none")
+
+    n = N_REQUESTS // 2 if quick else N_REQUESTS
+    batch_sizes = BATCH_SIZES[:2] if quick else BATCH_SIZES
+    variant = "quick" if quick else None
+
+    rows, by_batch, streams = [], {}, {}
+    for B in batch_sizes:
+        lock = serve_lockstep(model, params,
+                              make_load(n, cfg.vocab), B, opts)
+        cont = serve_continuous(model, params,
+                                make_load(n, cfg.vocab), B, opts)
+        ml, mc = _metrics(*lock), _metrics(*cont)
+        by_batch[str(B)] = {"lockstep": ml, "continuous": mc}
+
+        # SLOs (step clock: deterministic, cannot flake on machine load)
+        assert set(lock[0]) == set(cont[0]) == set(range(n)), \
+            f"B={B}: not every request was served"
+        assert lock[0] == cont[0], \
+            f"B={B}: greedy streams diverge between serving modes"
+        assert mc["tokens_per_step"] >= ml["tokens_per_step"], \
+            f"B={B}: continuous throughput below lockstep " \
+            f"({mc['tokens_per_step']} < {ml['tokens_per_step']})"
+        assert mc["p99_steps"] <= ml["p99_steps"], \
+            f"B={B}: continuous p99 above lockstep " \
+            f"({mc['p99_steps']} > {ml['p99_steps']})"
+
+        streams[str(B)] = {str(r): list(t) for r, t in sorted(cont[0].items())}
+        for mode, m in (("lockstep", ml), ("continuous", mc)):
+            rows.append((f"{NAME}.{mode}.b{B}",
+                         round(1e6 * m["wall_s"] / m["steps"], 1),
+                         m["tokens_per_step"]))
+
+    kernel = None
+    if not quick:
+        # flash-decode kernel on the generation path (interpret mode off
+        # TPU): greedy token streams must match the reference path
+        ref = serve_continuous(model, params,
+                               make_load(KERNEL_REQUESTS, cfg.vocab), 4, opts)
+        ker = serve_continuous(model, params,
+                               make_load(KERNEL_REQUESTS, cfg.vocab), 4, opts,
+                               use_kernel=True)
+        assert ker[0] == ref[0], "kernel-path greedy streams diverge"
+        kernel = {"batch_size": 4, **_metrics(*ker)}
+        rows.append((f"{NAME}.kernel.b4",
+                     round(1e6 * kernel["wall_s"] / kernel["steps"], 1),
+                     kernel["tokens_per_step"]))
+
+    router = run_router(quick)
+    rows.append((f"{NAME}.router", "",
+                 f"served={router['requests']}"
+                 f" failovers={router['failovers']}"))
+
+    # per-request token streams: CI runs --quick twice and diffs this
+    stem = f"{NAME}.{variant}.streams.json" if variant \
+        else f"{NAME}.streams.json"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, stem), "w") as f:
+        json.dump(streams, f, indent=1, sort_keys=True)
+
+    if not quick:
+        with open(BENCH_PATH, "w") as f:
+            json.dump({
+                "quick": quick, "arch": f"{ARCH} (reduced)",
+                "load": {"seed": LOAD_SEED, "n_requests": n,
+                         "prompt_len": [2, 12], "gen_len": [4, 24],
+                         "max_seq": MAX_SEQ},
+                "batch_sizes": by_batch, "kernel": kernel,
+                "router": router,
+            }, f, indent=1, sort_keys=True)
+            f.write("\n")
+    print(f"[exp] {NAME}: requests={n} batch_sizes={list(batch_sizes)} "
+          f"router_served={router['requests']} "
+          f"router_failovers={router['failovers']}",
+          file=sys.stderr, flush=True)
+    return write_rows(NAME, ("name", "us_per_call", "derived"), rows,
+                      variant=variant)
+
+
+def main(quick: bool = False) -> None:
+    emit(run(quick=quick))
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -17,42 +17,21 @@ import traceback
 
 
 def main() -> None:
+    from repro.exp import add_engine_args
+    from repro.exp.cli import ENGINE_ARG_NAMES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--workers", type=int, default=1,
-                    help="executor width for engine-backed figures")
-    ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process", "remote"),
-                    help="engine backend (default: serial at --workers 1, "
-                         "process pool above)")
-    ap.add_argument("--store-dir", default=None,
-                    help="sharded result-store directory (multi-host safe) "
-                         "instead of the default single-file store")
-    ap.add_argument("--hosts", default=None,
-                    help="remote executor host spec, e.g. "
-                         "'local*4,ssh:user@gpu1*8' (default: --workers "
-                         "local subprocess workers)")
-    ap.add_argument("--timeout", type=float, default=None,
-                    help="per-unit wall-clock budget in seconds "
-                         "(operational: never invalidates the store)")
-    ap.add_argument("--retries", type=int, default=0,
-                    help="extra attempts per unit after a failure/timeout "
-                         "before it is surfaced as a structured failure")
-    ap.add_argument("--granularity", default="run", choices=("run", "eval"),
-                    help="search work-unit granularity: one unit per whole "
-                         "run (default), or per objective evaluation — "
-                         "drivers run in-process and every yielded "
-                         "(provider, config) request is dispatched through "
-                         "the executor and memoized in the store, shared "
-                         "across methods/seeds/budgets")
+    add_engine_args(ap, granularity=True)
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
-                            fig5_drift, fig6_fidelity, kernels, roofline,
-                            surrogates, table2_dataset)
+                            fig5_drift, fig6_fidelity, fig7_serve, kernels,
+                            roofline, surrogates, table2_dataset)
     modules = [table2_dataset, fig2_sota, fig3_hierarchical, fig4_savings,
-               fig5_drift, fig6_fidelity, surrogates, roofline, kernels]
+               fig5_drift, fig6_fidelity, fig7_serve, surrogates, roofline,
+               kernels]
     print("name,us_per_call,derived")
     ok = True
     for mod in modules:
@@ -61,8 +40,7 @@ def main() -> None:
             continue
         kwargs = {"quick": args.quick}
         accepted = inspect.signature(mod.main).parameters
-        for opt in ("workers", "executor", "store_dir", "hosts",
-                    "timeout", "retries", "granularity"):
+        for opt in ENGINE_ARG_NAMES + ("granularity",):
             if opt in accepted:
                 kwargs[opt] = getattr(args, opt)
         try:

@@ -18,7 +18,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import ARCH_IDS, REGISTRY, shapes_for   # noqa: E402
-from repro.exp import ExperimentEngine, WorkUnit, open_store  # noqa: E402
+from repro.exp import (                                    # noqa: E402
+    WorkUnit, add_engine_args, engine_from_args, open_store)
 from repro.exp.runners import dryrun_runner                # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -43,26 +44,10 @@ def cells(meshes):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--meshes", default="pod,multipod")
-    ap.add_argument("--timeout", type=float, default=3600,
-                    help="per-cell wall-clock budget; routed through the "
-                         "engine timeout config down to the subprocess "
-                         "kill (operational: never invalidates the store)")
-    ap.add_argument("--retries", type=int, default=0,
-                    help="extra attempts per cell after a failure/timeout")
     ap.add_argument("--only", default=None, help="substring filter")
-    ap.add_argument("--workers", type=int, default=1,
-                    help="concurrent dry-run cells")
-    ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process", "remote"),
-                    help="engine backend; cells are subprocesses, so "
-                         "'thread' parallelizes them without a process "
-                         "pool (default: serial/process from --workers)")
-    ap.add_argument("--hosts", default=None,
-                    help="remote executor host spec, e.g. "
-                         "'local*2,ssh:user@host*8'")
-    ap.add_argument("--store-dir", default=None,
-                    help="sharded result-store directory (multi-host "
-                         "safe) instead of the single-file default")
+    # --timeout reaches the runner's subprocess kill through the engine's
+    # timeout config (injected into the runner context as unit_timeout_s)
+    add_engine_args(ap, timeout=3600)
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
 
@@ -76,17 +61,11 @@ def main():
             params["skip_reason"] = reason
         units.append(WorkUnit.make("dryrun", **params))
 
-    engine = ExperimentEngine(
-        dryrun_runner,
-        # --timeout reaches the runner's subprocess kill through the
-        # engine's timeout config (injected into the runner context as
-        # unit_timeout_s), not a hand-carried local_context key
+    engine = engine_from_args(
+        args, runner=dryrun_runner,
         local_context={"out_dir": OUT,
                        "src_path": os.path.join(ROOT, "src")},
-        unit_timeout_s=args.timeout, retries=args.retries,
-        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
-        store=open_store(args.store_dir or STORE), workers=args.workers,
-        executor=args.executor, verbose=True)
+        store=open_store(args.store_dir or STORE), verbose=True)
     t0 = time.time()
     with engine:
         results = engine.run(units)

@@ -23,7 +23,8 @@ import time      # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.exp import make_objective_engine, open_store  # noqa: E402
+from repro.exp import (                                  # noqa: E402
+    add_engine_args, engine_from_args, open_store)
 from repro.tuner.autotune import autotune                # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -52,24 +53,8 @@ BASELINE_KEYS = ("t_step", "t_compute", "t_memory", "t_collective",
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workers", type=int, default=1,
-                    help="concurrent compile evaluations per driver batch")
     ap.add_argument("--only", default=None, help="substring filter")
-    ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process", "remote"),
-                    help="engine backend (default: serial/process from "
-                         "--workers)")
-    ap.add_argument("--hosts", default=None,
-                    help="remote executor host spec, e.g. "
-                         "'local*2,ssh:user@host*8'")
-    ap.add_argument("--timeout", type=float, default=None,
-                    help="per-evaluation wall-clock budget in seconds")
-    ap.add_argument("--retries", type=int, default=0,
-                    help="extra attempts per evaluation after a "
-                         "failure/timeout")
-    ap.add_argument("--store-dir", default=None,
-                    help="sharded result-store directory (multi-host "
-                         "safe) instead of the single-file default")
+    add_engine_args(ap)
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
 
@@ -77,11 +62,8 @@ def main():
              if not args.only or args.only in f"{c[0]}.{c[1]}"]
     # one shared engine: all cells' evaluations share the memoizing
     # store and the executor backend
-    engine = make_objective_engine(
-        store=open_store(args.store_dir or STORE), workers=args.workers,
-        executor=args.executor,
-        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
-        unit_timeout_s=args.timeout, retries=args.retries)
+    engine = engine_from_args(
+        args, store=open_store(args.store_dir or STORE))
     t0 = time.time()
     failures = []
     with engine:

@@ -4,9 +4,12 @@ from repro.exp.executors import (
     EXECUTORS, BaseExecutor, LocalSubprocessTransport, ProcessExecutor,
     RemoteExecutor, SerialExecutor, SSHTransport, ThreadExecutor,
     WorkerTransport, make_executor, parse_hosts)
+from repro.exp.cli import (
+    add_engine_args, engine_from_args, engine_kwargs_from_args)
 from repro.exp.protocols import (
-    BUDGET_COUPLED, GRANULARITIES, make_engine, make_objective_engine,
-    predictive_regret, regret_curves, savings_distribution)
+    BUDGET_COUPLED, GRANULARITIES, experiment_engine, make_engine,
+    make_objective_engine, predictive_regret, regret_curves,
+    savings_distribution)
 from repro.exp.runners import drive_units, eval_unit
 from repro.exp.store import (
     BaseResultStore, ResultStore, ShardedResultStore, merge_stores,
@@ -19,9 +22,10 @@ __all__ = [
     "LocalSubprocessTransport", "ProcessExecutor", "RemoteExecutor",
     "RemoteTaskError", "ResultStore", "SSHTransport", "SerialExecutor",
     "ShardedResultStore", "ThreadExecutor", "UnitTimeout", "WorkUnit",
-    "WorkerDied", "WorkerTransport", "drive_units", "eval_unit",
-    "make_engine", "make_executor", "make_objective_engine",
-    "merge_stores", "open_store",
+    "WorkerDied", "WorkerTransport", "add_engine_args", "drive_units",
+    "engine_from_args", "engine_kwargs_from_args", "eval_unit",
+    "experiment_engine", "make_engine", "make_executor",
+    "make_objective_engine", "merge_stores", "open_store",
     "parse_hosts", "predictive_regret", "regret_curves",
     "savings_distribution", "unit_key",
 ]

@@ -30,6 +30,7 @@ from the method registry (:mod:`repro.core.registry`) — the former
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,61 +45,74 @@ from repro.exp.store import BaseResultStore, ResultStore, open_store
 GRANULARITIES = ("run", "eval")
 
 
-def make_objective_engine(*, context: Optional[dict] = None,
-                          workers: int = 1,
-                          store: Optional[BaseResultStore] = None,
-                          store_path: Optional[str] = None,
-                          store_dir: Optional[str] = None,
-                          executor: ExecutorSpec = None,
-                          executor_kwargs: Optional[dict] = None,
-                          unit_timeout_s: Optional[float] = None,
-                          retries: int = 0,
-                          mp_context: Optional[str] = None,
-                          local_context: Optional[dict] = None
-                          ) -> ExperimentEngine:
-    """Engine wired for objective evaluation units (any registered
-    objective — offline table, compile cost, dryrun).
+def experiment_engine(binding=None, *, dataset=None,
+                      context: Optional[dict] = None,
+                      workers: int = 1,
+                      store: Optional[BaseResultStore] = None,
+                      store_path: Optional[str] = None,
+                      store_dir: Optional[str] = None,
+                      executor: ExecutorSpec = None,
+                      executor_kwargs: Optional[dict] = None,
+                      unit_timeout_s: Optional[float] = None,
+                      retries: int = 0,
+                      mp_context: Optional[str] = None,
+                      local_context: Optional[dict] = None,
+                      runner=search_runner,
+                      verbose: bool = False) -> ExperimentEngine:
+    """THE engine factory — one construction path for every entrypoint.
 
-    ``context`` carries code-relevant identity (e.g. the offline
-    objective's ``dataset_seed``) and is folded into every unit's
-    content hash; ``local_context`` carries operational knobs runners
-    need but which must not affect identity (``out_dir``, ``src_path``,
-    ``objective_modules`` for custom objectives on process/remote
-    workers).  ``store_dir`` selects the sharded multi-writer layout;
-    ``store_path`` the single-file one; ``store`` injects any prebuilt
-    store.  ``unit_timeout_s``/``retries`` are the engine's
-    fault-tolerance budget (operational too); ``executor_kwargs``
-    reaches the backend constructor (e.g. ``hosts=`` for the remote
-    executor).
+    ``binding`` (optional) is an :class:`~repro.core.objectives.
+    ObjectiveBinding`: its code-relevant ``context()`` (e.g. the offline
+    objective's ``dataset_seed``) is folded into every unit's content
+    hash.  ``dataset`` is the offline-dataset convenience spelling of
+    the same thing (contributes ``dataset_seed``).  ``context`` adds or
+    overrides identity fields explicitly; ``local_context`` carries
+    operational knobs runners need but which must not affect identity
+    (``out_dir``, ``src_path``, ``objective_modules`` for custom
+    objectives on process/remote workers).
+
+    ``store_dir`` selects the sharded multi-writer layout; ``store_path``
+    the single-file one; ``store`` injects any prebuilt store.
+    ``unit_timeout_s``/``retries`` are the engine's fault-tolerance
+    budget (operational too); ``executor_kwargs`` reaches the backend
+    constructor (e.g. ``hosts=`` for the remote executor); ``runner``
+    swaps the unit runner (e.g. ``dryrun_runner``).
     """
+    ctx: dict = {}
+    if dataset is not None:
+        ctx["dataset_seed"] = int(dataset.seed)
+    if binding is not None:
+        ctx.update(binding.context())
+    ctx.update(context or {})
     if store is None:
         store = open_store(store_dir) if store_dir else ResultStore(store_path)
     return ExperimentEngine(
-        search_runner, context=dict(context or {}),
+        runner, context=ctx,
         store=store, workers=workers, executor=executor,
         executor_kwargs=executor_kwargs, unit_timeout_s=unit_timeout_s,
         retries=retries, mp_context=mp_context,
-        local_context=local_context)
+        local_context=local_context, verbose=verbose)
 
 
-def make_engine(dataset, *, workers: int = 1,
-                store: Optional[BaseResultStore] = None,
-                store_path: Optional[str] = None,
-                store_dir: Optional[str] = None,
-                executor: ExecutorSpec = None,
-                executor_kwargs: Optional[dict] = None,
-                unit_timeout_s: Optional[float] = None, retries: int = 0,
-                mp_context: Optional[str] = None) -> ExperimentEngine:
-    """Engine wired for offline-dataset search units: an objective
-    engine whose content-hash context carries the dataset collection
-    seed, so a dataset rebuilt with another seed never replays stale
-    results."""
-    return make_objective_engine(
-        context={"dataset_seed": int(dataset.seed)}, workers=workers,
-        store=store, store_path=store_path, store_dir=store_dir,
-        executor=executor, executor_kwargs=executor_kwargs,
-        unit_timeout_s=unit_timeout_s, retries=retries,
-        mp_context=mp_context)
+def make_objective_engine(**kwargs) -> ExperimentEngine:
+    """Deprecated spelling of :func:`experiment_engine` (kept as a thin
+    shim — identical construction, a ``DeprecationWarning``, nothing
+    else)."""
+    warnings.warn(
+        "make_objective_engine() is deprecated; use "
+        "repro.exp.experiment_engine(...)",
+        DeprecationWarning, stacklevel=2)
+    return experiment_engine(**kwargs)
+
+
+def make_engine(dataset, **kwargs) -> ExperimentEngine:
+    """Deprecated spelling of ``experiment_engine(dataset=...)`` (thin
+    shim with a ``DeprecationWarning``)."""
+    warnings.warn(
+        "make_engine(dataset) is deprecated; use "
+        "repro.exp.experiment_engine(dataset=dataset)",
+        DeprecationWarning, stacklevel=2)
+    return experiment_engine(dataset=dataset, **kwargs)
 
 
 def _search_unit(method: str, workload: str, target: str, seed: int,
@@ -149,7 +163,7 @@ def regret_curves(dataset, methods: Sequence[str], budgets: Sequence[int],
                   executor: ExecutorSpec = None,
                   granularity: str = "run") -> Dict[str, List[float]]:
     workloads = list(workloads or dataset.workloads)
-    engine = engine or make_engine(dataset, workers=workers, store=store,
+    engine = engine or experiment_engine(dataset=dataset, workers=workers, store=store,
                                    store_path=store_path,
                                    store_dir=store_dir, executor=executor)
     max_b = max(budgets)
@@ -194,7 +208,7 @@ def predictive_regret(dataset, methods: Sequence[str],
                       store_dir: Optional[str] = None,
                       executor: ExecutorSpec = None) -> Dict[str, float]:
     workloads = list(workloads or dataset.workloads)
-    engine = engine or make_engine(dataset, workers=workers, store=store,
+    engine = engine or experiment_engine(dataset=dataset, workers=workers, store=store,
                                    store_path=store_path,
                                    store_dir=store_dir, executor=executor)
     units = [
@@ -235,7 +249,7 @@ def savings_distribution(dataset, method: str, *, budget: int = 33,
     # lazy: keeps `import repro.exp` light for workers/CLI processes
     from repro.core.evaluate import savings_from_values
     workloads = list(workloads or dataset.workloads)
-    engine = engine or make_engine(dataset, workers=workers, store=store,
+    engine = engine or experiment_engine(dataset=dataset, workers=workers, store=store,
                                    store_path=store_path,
                                    store_dir=store_dir, executor=executor)
     b = dataset.domain.size() if method == "exhaustive" else budget

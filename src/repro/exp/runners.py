@@ -29,6 +29,7 @@ import json
 import os
 import subprocess
 import sys
+import warnings
 from typing import Any, Dict, List, Sequence, Tuple, Union
 
 from repro.core.objectives import ObjectiveBinding, bind_objective, \
@@ -106,14 +107,21 @@ DriveCell = Union[Tuple[Any, ObjectiveBinding], Tuple[Any, str, str]]
 
 def _normalize_cells(engine: ExperimentEngine,
                      cells: Sequence[DriveCell]) -> List[Tuple[Any, Any]]:
-    """Resolve every cell to (driver, binding), binding legacy
-    (driver, workload, target) triples to the offline objective at the
-    engine's dataset seed.  Each binding's required context must agree
-    with the engine's — a mismatched dataset seed would silently key
-    units against the wrong table."""
+    """Resolve every cell to (driver, binding).  Legacy
+    (driver, workload, target) triples still resolve — to the offline
+    objective at the engine's dataset seed — but are deprecated: the
+    documented cell form is a (driver, binding) pair.  Each binding's
+    required context must agree with the engine's — a mismatched
+    dataset seed would silently key units against the wrong table."""
     out = []
     for cell in cells:
         if len(cell) == 3:
+            warnings.warn(
+                "drive_units (driver, workload, target) triples are "
+                "deprecated; pass (driver, binding) pairs — e.g. "
+                "bind_objective('offline', workload=w, target=t, "
+                "dataset_seed=seed)",
+                DeprecationWarning, stacklevel=3)
             drv, w, t = cell
             binding = bind_objective(
                 "offline", workload=w, target=t,

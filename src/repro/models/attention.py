@@ -198,6 +198,11 @@ def decode_mha(
 ) -> jax.Array:
     """q: (B,1,Hq,D); caches: (B,Sk,Hkv,D); pos = current token position.
 
+    ``pos`` is either a scalar (lockstep batch: every sequence sits at the
+    same position) or a ``(B,)`` vector of per-slot positions (continuous
+    batching: each slot has its own occupancy).  The scalar case lowers to
+    a single broadcast mask row, so its numerics are unchanged.
+
     When ``k_new/v_new`` are given, the caches are treated as holding only
     positions < pos and the current token's K/V enter the softmax as one
     extra slot — this keeps the cache READ-ONLY inside scan-over-layers
@@ -212,10 +217,11 @@ def decode_mha(
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     kpos = jnp.arange(Sk)
-    m = (kpos < pos) if k_new is not None else (kpos <= pos)
+    posb = jnp.reshape(jnp.asarray(pos), (-1, 1))    # (1,1) | (B,1)
+    m = (kpos[None, :] < posb) if k_new is not None else (kpos[None, :] <= posb)
     if window:
-        m = m & ((kpos > pos - window) | is_global)
-    s = jnp.where(m[None, None, None], s, NEG_INF)
+        m = m & ((kpos[None, :] > posb - window) | is_global)
+    s = jnp.where(m[:, None, None, :], s, NEG_INF)
     if k_new is not None:
         s_self = jnp.einsum(
             "bkgd,bskd->bkgs", qg, k_new.astype(q.dtype),
@@ -266,9 +272,15 @@ def cross_attention(
 
 def decode_self_attention(
     p, x: jax.Array, k_cache, v_cache, cfg: ArchConfig, ctx: ShardCtx, *,
-    pos, is_global=True,
+    pos, is_global=True, use_kernel: bool = False,
 ):
     """One-token decode step; cache stays read-only here.
+
+    ``pos`` is a scalar (lockstep) or ``(B,)`` per-slot positions
+    (continuous batching); rope is applied at each slot's own position.
+    With ``use_kernel`` the softmax runs through the flash-decode Pallas
+    kernel (``repro.kernels.ops.decode_attention``) with per-slot
+    ``length`` — sliding-window configs must stay on the reference path.
 
     Returns (out, k_new, v_new) — the caller batches the cache write for all
     layers into one in-place dynamic-update-slice after the layer scan.
@@ -276,11 +288,28 @@ def decode_self_attention(
     B = x.shape[0]
     q = project_q(p, x, cfg)                       # (B,1,Hq,D)
     k_new, v_new = project_kv(p, x, cfg)           # (B,1,Hkv,D)
-    posv = jnp.full((B, 1), pos)
+    posv = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos), (-1, 1)), (B, 1))
     q = rope(q, posv, cfg.rope_theta)
     k_new = rope(k_new, posv, cfg.rope_theta)
-    o = decode_mha(q, k_cache, v_cache, ctx, pos=pos,
-                   is_global=is_global, window=cfg.sliding_window,
-                   k_new=k_new, v_new=v_new)
+    if use_kernel:
+        if cfg.sliding_window:
+            raise ValueError(
+                "decode_attention kernel has no sliding-window mask; "
+                "keep use_kernel=False for windowed configs")
+        from repro.kernels import ops as kernel_ops
+        posb = posv[:, 0].astype(jnp.int32)                    # (B,)
+        upd = jax.vmap(lambda c, n, p_: jax.lax.dynamic_update_slice_in_dim(
+            c, n, p_, axis=0))
+        k_full = upd(k_cache, k_new.astype(k_cache.dtype), posb)
+        v_full = upd(v_cache, v_new.astype(v_cache.dtype), posb)
+        o = kernel_ops.decode_attention(
+            q.astype(k_cache.dtype).reshape(B, cfg.n_heads, cfg.head_dim),
+            k_full.transpose(0, 2, 1, 3), v_full.transpose(0, 2, 1, 3),
+            posb + 1)
+        o = o.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    else:
+        o = decode_mha(q, k_cache, v_cache, ctx, pos=pos,
+                       is_global=is_global, window=cfg.sliding_window,
+                       k_new=k_new, v_new=v_new)
     return (out_proj(p, o.astype(x.dtype), cfg),
             k_new.astype(k_cache.dtype), v_new.astype(v_cache.dtype))

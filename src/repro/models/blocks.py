@@ -71,11 +71,16 @@ def dense_block(p, h, cfg: ArchConfig, ctx: ShardCtx, opts: ModelOpts, *,
 
 
 def dense_block_decode(p, h, k_cache, v_cache, cfg: ArchConfig,
-                       ctx: ShardCtx, *, pos, is_global=True):
-    """One-token step; cache read-only.  Returns (h, k_new, v_new)."""
+                       ctx: ShardCtx, *, pos, is_global=True,
+                       use_kernel: bool = False):
+    """One-token step; cache read-only.  Returns (h, k_new, v_new).
+
+    ``pos`` may be scalar (lockstep) or ``(B,)`` per-slot positions;
+    ``use_kernel`` routes the softmax through the flash-decode kernel.
+    """
     a, k_new, v_new = attn.decode_self_attention(
         p["attn"], rmsnorm(p["ln1"], h), k_cache, v_cache, cfg, ctx,
-        pos=pos, is_global=is_global)
+        pos=pos, is_global=is_global, use_kernel=use_kernel)
     h = h + a
     hn = rmsnorm(p["ln2"], h)
     if cfg.n_experts:

@@ -352,13 +352,21 @@ class Model:
                     opts: ModelOpts = ModelOpts()):
         """One token for every sequence in the batch.
 
-        batch: {"token": (B,1) int32, "pos": scalar int32}
+        batch: {"token": (B,1) int32, "pos": scalar int32 or (B,) int32}
         -> (logits (B,V) f32, new cache)
+
+        A scalar ``pos`` is the lockstep path (every sequence at the same
+        position); a ``(B,)`` vector gives each slot its own position —
+        rope, attention masking, and the KV-cache write all happen at the
+        slot's own occupancy (continuous batching).  Per-slot positions are
+        supported for the dense/moe (KV cache) and ssm (position-free
+        recurrent state) families.
         """
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         params = _precast(params, dtype, self.param_spec(), ctx)
         pos = batch["pos"]
+        per_slot = jnp.ndim(pos) == 1
         h = embed(params["embed"], batch["token"], dtype)   # (B,1,D)
         h = ctx.constrain(h, "batch", "seq", "act_embed")
 
@@ -368,18 +376,28 @@ class Model:
             def body(hh, xs):
                 p_i, flag, kc, vc = xs
                 hh, kn, vn = B.dense_block_decode(
-                    p_i, hh, kc, vc, cfg, ctx, pos=pos, is_global=flag)
+                    p_i, hh, kc, vc, cfg, ctx, pos=pos, is_global=flag,
+                    use_kernel=opts.use_kernel)
                 return hh, (kn, vn)
 
             h, (kns, vns) = jax.lax.scan(
                 body, h, (params["layers"], flags, cache["k"], cache["v"]))
             # single fused in-place cache write for all layers
-            cache = {
-                "k": jax.lax.dynamic_update_slice_in_dim(
-                    cache["k"], kns, pos, axis=2),
-                "v": jax.lax.dynamic_update_slice_in_dim(
-                    cache["v"], vns, pos, axis=2),
-            }
+            if per_slot:
+                # scatter each slot's K/V row at its own position
+                upd = jax.vmap(
+                    lambda c, n, p_: jax.lax.dynamic_update_slice_in_dim(
+                        c, n, p_, axis=1),
+                    in_axes=(1, 1, 0), out_axes=1)
+                cache = {"k": upd(cache["k"], kns, pos),
+                         "v": upd(cache["v"], vns, pos)}
+            else:
+                cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], kns, pos, axis=2),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], vns, pos, axis=2),
+                }
 
         elif cfg.family == "ssm":
             def body(hh, xs):
@@ -393,6 +411,10 @@ class Model:
             cache = {"ssm": new["ssm"], "conv": new["conv"]}
 
         elif cfg.family == "hybrid":
+            if per_slot:
+                raise NotImplementedError(
+                    "per-slot decode positions: hybrid family serves via "
+                    "the lockstep path")
             shared = params["shared"]
 
             def inner(hh, xs):
@@ -428,6 +450,11 @@ class Model:
             cache = new
 
         elif cfg.family == "vlm":
+            if per_slot:
+                raise NotImplementedError(
+                    "per-slot decode positions: vlm family serves via "
+                    "the lockstep path")
+
             def inner(hh, xs):
                 p_i, kc, vc = xs
                 hh, kn, vn = B.dense_block_decode(

@@ -1,5 +1,8 @@
 from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
 from repro.runtime.fault import StragglerDetector, FailureInjector
+from repro.runtime.router import ConfigRouter, RouteDecision
+from repro.runtime.serve import BatchedServer, LockstepServer, Request
 
-__all__ = ["TrainLoop", "TrainLoopConfig", "StragglerDetector",
-           "FailureInjector"]
+__all__ = ["BatchedServer", "ConfigRouter", "FailureInjector",
+           "LockstepServer", "Request", "RouteDecision",
+           "StragglerDetector", "TrainLoop", "TrainLoopConfig"]

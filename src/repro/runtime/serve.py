@@ -1,10 +1,17 @@
-"""Batched serving loop: continuous-batching-style greedy decoding.
+"""Serving loops: continuous batching with a retained lockstep reference.
 
-Requests (token prompts) are packed into a fixed decode batch; prompts are
-consumed token-by-token through the same ``decode_step`` used for
-generation (prefix and generation share the KV-cache path), finished
-sequences free their slot for queued requests.  This is the CPU-runnable
-counterpart of the ``decode_*`` dry-run cells.
+``BatchedServer`` is a continuous-batching greedy server: every slot
+carries its own position and KV-cache occupancy, requests are admitted
+mid-flight via the ``submit()/step()/drain()`` streaming API, and the
+flash-decode Pallas kernel (``repro.kernels.ops.decode_attention``) can
+run the generation path with per-slot ``length`` instead of a shared
+position.  ``run()`` stays as a thin closed-batch compat wrapper.
+
+``LockstepServer`` retains the original loop — one shared ``pos``, a
+closed-batch ``run()``, hard truncation at ``S-1`` — as the bit-identity
+reference: on closed batches without slot reuse every slot consumes one
+token per step, so the per-slot positions coincide with the shared
+position and the continuous server's greedy outputs are bit-identical.
 """
 from __future__ import annotations
 
@@ -27,9 +34,23 @@ class Request:
     max_new_tokens: int = 16
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # step-clock bookkeeping (set by the continuous server; units = decode
+    # steps, which are wall-clock-independent and therefore deterministic)
+    arrived: Optional[int] = None      # submit() time
+    started: Optional[int] = None      # slot admission time
+    finished: Optional[int] = None     # completion time
 
 
-class BatchedServer:
+class LockstepServer:
+    """Original lockstep loop (shared position) — bit-identity reference.
+
+    All slots advance one shared ``pos`` together; the whole batch hard-
+    truncates when it reaches ``S-1``.  Late-admitted requests inherit the
+    current shared position, so only batches without slot reuse are served
+    at correct positions — exactly the regime the continuous server's
+    ``run()`` is pinned bit-identical against.
+    """
+
     def __init__(self, model: Model, params, *, batch_size: int = 4,
                  max_seq: int = 256, opts: ModelOpts = ModelOpts(),
                  eos_id: Optional[int] = None):
@@ -43,6 +64,11 @@ class BatchedServer:
         self.pos = 0                       # shared position (lockstep batch)
         self._decode = jax.jit(
             lambda p, b, c: model.decode_step(p, b, c, NOSHARD, opts))
+
+    def reset(self) -> None:
+        """Rewind for a fresh closed batch (epoch serving)."""
+        self.pos = 0
+        self.cache = self.model.init_cache(self.B, self.S, jnp.float32)
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve a closed batch of requests to completion (greedy)."""
@@ -92,3 +118,172 @@ class BatchedServer:
                 break
             admit()
         return results
+
+
+class BatchedServer:
+    """Continuous-batching greedy server with per-slot positions.
+
+    Streaming API: ``submit(request)`` enqueues, ``step()`` admits queued
+    requests into free slots and runs ONE fused batched decode step
+    (returning the requests that finished on it), ``drain()`` steps until
+    the queue and all slots are empty.  A slot frees the moment its
+    request finishes — the next queued request is admitted at position 0
+    on the very next step, while its co-batched neighbours keep decoding
+    at their own positions.
+
+    ``run()`` is a closed-batch compat wrapper; on batches without slot
+    reuse its greedy outputs are bit-identical to :class:`LockstepServer`
+    (the per-slot mask rows and rope positions coincide with the shared
+    position, and the argmax over identical logits is deterministic).
+
+    ``use_kernel=True`` puts the flash-decode Pallas kernel on the
+    generation path with per-slot ``length`` (dense/moe without a sliding
+    window; greedy tokens are validated against the reference path).
+    Families with per-slot support: dense / moe (KV caches) and ssm
+    (position-free recurrent state, reset per slot on admission);
+    hybrid / vlm fall back to an internal lockstep server (``run()`` only).
+    """
+
+    SLOT_FAMILIES = ("dense", "moe", "ssm")
+
+    def __init__(self, model: Model, params, *, batch_size: int = 4,
+                 max_seq: int = 256, opts: ModelOpts = ModelOpts(),
+                 eos_id: Optional[int] = None,
+                 use_kernel: Optional[bool] = None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.S = max_seq
+        self.opts = opts
+        self.eos_id = eos_id
+        cfg = model.cfg
+        self.continuous = cfg.family in self.SLOT_FAMILIES
+        if use_kernel is None:
+            use_kernel = opts.use_kernel
+        self.use_kernel = bool(use_kernel and cfg.family in ("dense", "moe")
+                               and not cfg.sliding_window)
+        self._lockstep: Optional[LockstepServer] = None
+        if not self.continuous:
+            self._lockstep = LockstepServer(
+                model, params, batch_size=batch_size, max_seq=max_seq,
+                opts=opts, eos_id=eos_id)
+            return
+        self.cache = model.init_cache(batch_size, max_seq, jnp.float32)
+        self.steps = 0                     # completed decode steps
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * self.B
+        self.results: Dict[int, List[int]] = {}
+        self._cursor = np.zeros(self.B, np.int64)   # per-slot prompt cursor
+        self._token = np.zeros((self.B, 1), np.int32)
+        self._pos = np.zeros(self.B, np.int32)      # per-slot position
+        if cfg.family in ("dense", "moe"):
+            dopts = dataclasses.replace(opts, use_kernel=self.use_kernel)
+        else:
+            dopts = opts
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model.decode_step(
+                p, {"token": t, "pos": pos}, c, NOSHARD, dopts))
+
+    # ------------------------------------------------------------------
+    # Streaming API
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Enqueue a request; it is admitted on the next free slot."""
+        if not self.continuous:
+            raise RuntimeError(
+                f"{self.model.cfg.family} serves via the lockstep fallback; "
+                "use run()")
+        if request.arrived is None:
+            request.arrived = self.steps
+        self.queue.append(request)
+
+    def step(self) -> List[Request]:
+        """Admit queued requests, run one fused decode step.
+
+        Returns the requests that finished on this step (streamed out in
+        slot order).  A no-op (empty list) when nothing is queued/active.
+        """
+        if not self.continuous:
+            raise RuntimeError(
+                f"{self.model.cfg.family} serves via the lockstep fallback; "
+                "use run()")
+        self._admit()
+        if not any(a is not None for a in self.active):
+            return []
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._token),
+            jnp.asarray(self._pos, jnp.int32), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        self.steps += 1
+        finished: List[Request] = []
+        for i in range(self.B):
+            r = self.active[i]
+            if r is None:
+                continue
+            self._pos[i] += 1
+            self._cursor[i] += 1
+            if self._cursor[i] < len(r.prompt):
+                self._token[i, 0] = r.prompt[self._cursor[i]]  # prompt feed
+            else:
+                t = int(nxt[i])
+                r.output.append(t)
+                self._token[i, 0] = t
+                if len(r.output) >= r.max_new_tokens or \
+                        (self.eos_id is not None and t == self.eos_id):
+                    self._finish(i, finished)
+                    continue
+            if self._pos[i] >= self.S - 1:
+                # this slot's KV budget is exhausted: truncate ONLY this
+                # request (the lockstep loop flushed the whole batch here)
+                self._finish(i, finished)
+        return finished
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Step until every queued/active request has finished."""
+        if not self.continuous:
+            raise RuntimeError(
+                f"{self.model.cfg.family} serves via the lockstep fallback; "
+                "use run()")
+        out: Dict[int, List[int]] = {}
+        while any(a is not None for a in self.active) or self.queue:
+            for r in self.step():
+                out[r.rid] = list(r.output)
+        return out
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Closed-batch compat wrapper: submit everything, drain."""
+        if not self.continuous:
+            return self._lockstep.run(requests)
+        for r in requests:
+            self.submit(r)
+        return self.drain()
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        for i in range(self.B):
+            if self.active[i] is None and self.queue:
+                r = self.queue.pop(0)
+                self.active[i] = r
+                self._cursor[i] = 0
+                self._pos[i] = 0
+                self._token[i, 0] = r.prompt[0]
+                r.started = self.steps
+                self._reset_slot(i)
+
+    def _reset_slot(self, i: int) -> None:
+        if self.model.cfg.family != "ssm":
+            # KV entries above/at the slot's position are masked out and
+            # overwritten as it advances — no reset needed.
+            return
+        # recurrent state carries across occupants: re-zero the slot
+        self.cache = {k: v.at[:, i].set(0) for k, v in self.cache.items()}
+
+    def _finish(self, i: int, finished: List[Request]) -> None:
+        r = self.active[i]
+        r.done = True
+        r.finished = self.steps
+        self.results[r.rid] = list(r.output)
+        self.active[i] = None
+        finished.append(r)

@@ -125,14 +125,14 @@ def autotune_search(binding: ObjectiveBinding, *, budget: int = 11,
     seed) — driver state machines are deterministic and tells replay in
     request order.
     """
-    from repro.exp.protocols import make_objective_engine
+    from repro.exp.protocols import experiment_engine
     from repro.exp.runners import drive_units
 
     domain = binding.make_domain()
     drv = make_tuner_driver(driver, domain, budget, seed)
     owns_engine = engine is None
     if owns_engine:
-        engine = make_objective_engine(context=binding.context())
+        engine = experiment_engine(binding)
     try:
         (history,) = drive_units(engine, [(drv, binding)])
         best_provider, best_config, best_value = driver_best(drv)
@@ -226,7 +226,7 @@ def _binding_from_args(args) -> ObjectiveBinding:
 
 def main() -> None:
     from repro.core.objectives import objective_names
-    from repro.exp.protocols import make_objective_engine
+    from repro.exp import add_engine_args, engine_from_args
 
     ap = argparse.ArgumentParser(
         description="Autotune one cell: any registered search method "
@@ -251,35 +251,12 @@ def main() -> None:
                     help=f"registered search method (e.g. "
                          f"{', '.join(DRIVERS)})")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--executor", default=None,
-                    choices=("serial", "thread", "process", "remote"),
-                    help="engine backend for batched arm pulls "
-                         "(default: serial/process from --workers)")
-    ap.add_argument("--workers", type=int, default=1,
-                    help="concurrent evaluations per batch")
-    ap.add_argument("--hosts", default=None,
-                    help="remote executor host spec, e.g. "
-                         "'local*2,ssh:user@host*8'")
-    ap.add_argument("--timeout", type=float, default=None,
-                    help="per-evaluation wall-clock budget in seconds")
-    ap.add_argument("--retries", type=int, default=0,
-                    help="extra attempts per evaluation after a failure")
-    ap.add_argument("--store", default=None,
-                    help="single-file JSONL result store (memoizes "
-                         "evaluations across runs)")
-    ap.add_argument("--store-dir", default=None,
-                    help="sharded result-store directory (multi-writer "
-                         "safe) instead of --store")
+    add_engine_args(ap)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     binding = _binding_from_args(args)
-    engine = make_objective_engine(
-        context=binding.context(), workers=args.workers,
-        store_path=args.store, store_dir=args.store_dir,
-        executor=args.executor,
-        executor_kwargs={"hosts": args.hosts} if args.hosts else None,
-        unit_timeout_s=args.timeout, retries=args.retries)
+    engine = engine_from_args(args, binding)
     with engine:
         result = autotune_search(binding, budget=args.budget,
                                  driver=args.driver, seed=args.seed,

@@ -13,6 +13,7 @@ import pytest
 from repro.core.cloudbandit import CloudBandit, b1_for_budget
 from repro.core.drivers import (
     CloudBanditDriver, RisingBanditsDriver, drive)
+from repro.core.objectives import bind_objective
 from repro.core.evaluate import (
     SEARCH_METHODS, run_search, run_search_reference)
 from repro.core.optimizers import RBFOpt
@@ -20,7 +21,7 @@ from repro.core.registry import (
     BUDGET_COUPLED, get_method, is_budget_coupled, method_names,
     register_method)
 from repro.core.rising_bandits import RisingBandits
-from repro.exp import make_engine, regret_curves, savings_distribution
+from repro.exp import experiment_engine, regret_curves, savings_distribution
 from repro.exp.runners import drive_units, eval_unit
 from repro.multicloud import build_dataset
 
@@ -188,20 +189,22 @@ def test_eval_granularity_bit_identical(method, executor, ds, task,
     w = ds.workloads[0]
     store_path = str(tmp_path / "units.jsonl")
 
-    cold = make_engine(ds, store_path=store_path, executor=executor,
+    cold = experiment_engine(dataset=ds, store_path=store_path, executor=executor,
                        workers=2)
     driver = get_method(method).make_driver(ds.domain, BUDGET, SEED,
                                             target=task.target)
-    (hist,) = drive_units(cold, [(driver, w, task.target)])
+    binding = bind_objective("offline", workload=w, target=task.target,
+                             dataset_seed=int(ds.seed))
+    (hist,) = drive_units(cold, [(driver, binding)])
     assert_history_equal(hist, reference[method])
     assert cold.lifetime.computed > 0
 
     # warm: a fresh engine over the same store replays every evaluation
-    warm = make_engine(ds, store_path=store_path, executor=executor,
+    warm = experiment_engine(dataset=ds, store_path=store_path, executor=executor,
                        workers=2)
     driver2 = get_method(method).make_driver(ds.domain, BUDGET, SEED,
                                              target=task.target)
-    (hist2,) = drive_units(warm, [(driver2, w, task.target)])
+    (hist2,) = drive_units(warm, [(driver2, binding)])
     assert_history_equal(hist2, reference[method])
     assert warm.lifetime.computed == 0
     assert warm.lifetime.cached > 0
@@ -211,11 +214,12 @@ def test_eval_units_shared_across_methods_and_seeds(ds, task):
     """The whole point of eval granularity: identical evaluations are
     memoized once, across methods, seeds, and budgets — never more
     computed units than the 88-point grid."""
-    engine = make_engine(ds)
-    w = ds.workloads[0]
+    engine = experiment_engine(dataset=ds)
+    binding = bind_objective("offline", workload=ds.workloads[0],
+                             target="cost", dataset_seed=int(ds.seed))
     cells = [
-        (get_method(m).make_driver(ds.domain, b, s, target="cost"), w,
-         "cost")
+        (get_method(m).make_driver(ds.domain, b, s, target="cost"),
+         binding)
         for m in ("random", "smac", "rb") for s in (0, 1) for b in (11, 22)
     ]
     drive_units(engine, cells)
@@ -235,10 +239,12 @@ def test_eval_unit_key_is_method_and_seed_free(ds):
 
 
 def test_eval_failure_surfaces_with_context(ds):
-    engine = make_engine(ds)
+    engine = experiment_engine(dataset=ds)
     driver = get_method("random").make_driver(ds.domain, 5, 0)
+    bad = bind_objective("offline", workload="no-such-workload",
+                         target="cost", dataset_seed=int(ds.seed))
     with pytest.raises(RuntimeError, match="eval unit failed"):
-        drive_units(engine, [(driver, "no-such-workload", "cost")])
+        drive_units(engine, [(driver, bad)])
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,7 @@ import pytest
 
 from repro.exp import (
     EXECUTORS, ExperimentEngine, ProcessExecutor, RemoteExecutor,
-    ResultStore, SerialExecutor, ThreadExecutor, WorkUnit, make_engine,
+    ResultStore, SerialExecutor, ThreadExecutor, WorkUnit, experiment_engine,
     make_executor, regret_curves)
 from repro.multicloud.dataset import build_dataset
 
@@ -159,7 +159,7 @@ def test_all_executors_agree_bitwise(ds, workloads):
         "process-4": dict(executor="process", workers=4),
     }.items():
         store = ResultStore()
-        engine = make_engine(ds, store=store, **kwargs)
+        engine = experiment_engine(dataset=ds, store=store, **kwargs)
         runs[label] = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",
                                     workloads, engine=engine)
         stores[label] = store
@@ -175,7 +175,7 @@ def test_injected_executor_reused_across_runs(ds, workloads):
     """A caller-owned instance survives multiple engine.run() calls and
     matches the per-run-owned default."""
     with ThreadExecutor(workers=2) as ex:
-        engine = make_engine(ds, store=ResultStore(), executor=ex)
+        engine = experiment_engine(dataset=ds, store=ResultStore(), executor=ex)
         first = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",
                               workloads, engine=engine)
         second = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost",

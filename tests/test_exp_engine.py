@@ -5,7 +5,7 @@ import pytest
 
 from repro.core.evaluate import regret_curves, run_search
 from repro.exp import (
-    ExperimentEngine, ResultStore, WorkUnit, make_engine, unit_key)
+    ExperimentEngine, ResultStore, WorkUnit, experiment_engine, unit_key)
 from repro.exp.runners import search_runner
 from repro.multicloud.dataset import build_dataset, build_dataset_reference
 
@@ -59,12 +59,12 @@ def test_engine_matches_legacy_serial_loop(ds, workloads):
 # ---------------------------------------------------------------------------
 def test_store_resume_zero_recompute(ds, workloads, tmp_path):
     path = str(tmp_path / "units.jsonl")
-    eng1 = make_engine(ds, workers=1, store_path=path)
+    eng1 = experiment_engine(dataset=ds, workers=1, store_path=path)
     first = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
                           engine=eng1)
     assert eng1.stats.computed > 0 and eng1.stats.cached == 0
 
-    eng2 = make_engine(ds, workers=1, store_path=path)   # fresh load
+    eng2 = experiment_engine(dataset=ds, workers=1, store_path=path)   # fresh load
     second = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
                            engine=eng2)
     assert eng2.stats.computed == 0
@@ -74,12 +74,12 @@ def test_store_resume_zero_recompute(ds, workloads, tmp_path):
 
 def test_store_survives_torn_tail(ds, workloads, tmp_path):
     path = str(tmp_path / "units.jsonl")
-    eng = make_engine(ds, store_path=path)
+    eng = experiment_engine(dataset=ds, store_path=path)
     regret_curves(ds, ("random",), BUDGETS, (0,), "cost", workloads,
                   engine=eng)
     with open(path, "a") as f:
         f.write('{"key": "truncated-by-cra')      # simulated crash mid-write
-    eng2 = make_engine(ds, store_path=path)
+    eng2 = experiment_engine(dataset=ds, store_path=path)
     regret_curves(ds, ("random",), BUDGETS, (0,), "cost", workloads,
                   engine=eng2)
     assert eng2.stats.computed == 0
@@ -98,7 +98,7 @@ def test_key_depends_on_dataset_seed():
 # dedup + failure isolation
 # ---------------------------------------------------------------------------
 def test_duplicate_units_computed_once(ds):
-    eng = make_engine(ds)
+    eng = experiment_engine(dataset=ds)
     u = WorkUnit.make("search", method="random",
                       workload=ds.workloads[0], target="cost",
                       seed=0, budget=11)

@@ -26,7 +26,7 @@ from repro.core.objectives import (
     bind_objective, fidelity_ladder, objective_families,
     register_objective)
 from repro.core.registry import get_method, method_names
-from repro.exp import make_objective_engine
+from repro.exp import experiment_engine
 from repro.exp.runners import _request_unit, drive_units, eval_unit
 from repro.kernels import bench
 from repro.multicloud import build_dataset
@@ -41,7 +41,7 @@ def ds():
 
 
 def _engine(tmp_path, name="units.jsonl", dataset_seed=0, **kw):
-    return make_objective_engine(context={"dataset_seed": dataset_seed},
+    return experiment_engine(context={"dataset_seed": dataset_seed},
                                  store_path=str(tmp_path / name), **kw)
 
 
@@ -423,7 +423,7 @@ def test_kernel_ladder_search_end_to_end(tmp_path):
     lad = bind_ladder("kernel", preset="tiny", reps=2)
     dom = lad.make_domain()
     drv = get_method("mf_sh").make_driver(dom, 6, 0, target="time")
-    eng = make_objective_engine(store_path=str(tmp_path / "k.jsonl"))
+    eng = experiment_engine(store_path=str(tmp_path / "k.jsonl"))
     drive_units(eng, [(drv, lad)])
     assert drv.spend == {0: dom.size(), 1: 2}
     prov, cfg, loss, _h = drv.result()

@@ -17,7 +17,7 @@ from repro.core.drivers import drive
 from repro.core.objectives import EvalFailure, bind_objective, get_objective
 from repro.core.optimizers import RBFOpt
 from repro.core.registry import get_method, is_budget_coupled
-from repro.exp import make_engine
+from repro.exp import experiment_engine
 from repro.exp.runners import drive_units
 from repro.multicloud import build_dataset
 from repro.multicloud.market import (
@@ -181,7 +181,7 @@ def test_ticked_binding_mints_distinct_units_per_tick(ds):
 # failure-aware drive_units: clock, observer, structured failures
 # ---------------------------------------------------------------------------
 def test_drive_units_market_outage_never_aborts(ds):
-    engine = make_engine(ds)
+    engine = experiment_engine(dataset=ds)
     clock = MarketClock()
     binding = TickedBinding(
         _market_binding(ds, ds.workloads[0],
@@ -202,14 +202,15 @@ def test_drive_units_market_outage_never_aborts(ds):
 
 def test_drive_units_engine_failure_routing(ds):
     drv = get_method("random").make_driver(ds.domain, 4, 0)
+    bad = bind_objective("offline", workload="no-such-workload",
+                         target="cost", dataset_seed=int(ds.seed))
     with pytest.raises(ValueError, match="on_failure"):
-        drive_units(make_engine(ds), [(drv, "w", "cost")],
+        drive_units(experiment_engine(dataset=ds), [(drv, bad)],
                     on_failure="ignore")
     # a worker exception (unknown workload) raises by default but is
     # downgraded to EvalFailure tells under on_failure="tell"
     drv = get_method("random").make_driver(ds.domain, 4, 0)
-    (hist,) = drive_units(make_engine(ds),
-                          [(drv, "no-such-workload", "cost")],
+    (hist,) = drive_units(experiment_engine(dataset=ds), [(drv, bad)],
                           on_failure="tell")
     assert len(drv.failures) == 4
     assert all(math.isfinite(v) for v in hist.values)
@@ -220,7 +221,7 @@ def test_market_run_bit_identical_across_executors(ds, tmp_path):
     thread, and process executors, cold stores each."""
     hists = {}
     for ex in ("serial", "thread", "process"):
-        engine = make_engine(ds, store_path=str(tmp_path / f"{ex}.jsonl"),
+        engine = experiment_engine(dataset=ds, store_path=str(tmp_path / f"{ex}.jsonl"),
                              executor=ex, workers=2)
         clock = MarketClock()
         binding = TickedBinding(_market_binding(ds, ds.workloads[1]), clock)
@@ -240,7 +241,7 @@ def test_market_faulted_run_replays_warm(ds, tmp_path):
     store_path = str(tmp_path / "units.jsonl")
     hists = []
     for phase in ("cold", "warm"):
-        engine = make_engine(ds, store_path=store_path)
+        engine = experiment_engine(dataset=ds, store_path=store_path)
         clock = MarketClock()
         binding = TickedBinding(
             _market_binding(ds, ds.workloads[0],

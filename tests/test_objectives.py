@@ -20,7 +20,7 @@ from repro.core.domain import Domain, ParamSpace, ProviderSpace
 from repro.core.objectives import (
     bind_objective, dryrun_command, get_objective, objective_names,
     objective_specs, register_objective)
-from repro.exp import make_objective_engine
+from repro.exp import experiment_engine
 from repro.exp.runners import drive_units, eval_unit
 from repro.multicloud import build_dataset
 from repro.tuner.autotune import (
@@ -217,14 +217,14 @@ def test_pre_registry_store_replays_offline_with_computed_zero(ds, tmp_path):
     binding without computing anything."""
     w, target = ds.workloads[0], "cost"
     store_path = str(tmp_path / "legacy.jsonl")
-    legacy = make_objective_engine(context={"dataset_seed": ds.seed},
+    legacy = experiment_engine(context={"dataset_seed": ds.seed},
                                   store_path=store_path)
     units = [eval_unit(w, target, prov, cfg)
              for prov, cfg in ds.domain.all_candidates()]
     legacy.run(units)
     assert legacy.lifetime.computed == len(units)
 
-    warm = make_objective_engine(context={"dataset_seed": ds.seed},
+    warm = experiment_engine(context={"dataset_seed": ds.seed},
                                  store_path=store_path)
     b = bind_objective("offline", workload=w, target=target,
                        dataset_seed=int(ds.seed))
@@ -236,7 +236,7 @@ def test_pre_registry_store_replays_offline_with_computed_zero(ds, tmp_path):
 
 
 def test_binding_context_mismatch_rejected(ds):
-    engine = make_objective_engine(context={"dataset_seed": 7})
+    engine = experiment_engine(context={"dataset_seed": 7})
     b = bind_objective("offline", workload=ds.workloads[0], target="cost",
                        dataset_seed=3)
     drv = make_tuner_driver("random", ds.domain, 3, 0)
@@ -256,7 +256,7 @@ def test_autotune_bit_identical_to_reference(driver, tmp_path):
     reference = [(p[0], p[1], v) for p, v in zip(hist.points, hist.values)]
 
     store_path = str(tmp_path / "units.jsonl")
-    cold = make_objective_engine(store_path=store_path, executor="thread",
+    cold = experiment_engine(store_path=store_path, executor="thread",
                                  workers=2)
     res = autotune_search(bind_objective("synthetic"), budget=BUDGET,
                           driver=driver, seed=SEED, engine=cold)
@@ -266,7 +266,7 @@ def test_autotune_bit_identical_to_reference(driver, tmp_path):
             res["best_value"]) == (prov, cfg, val)
     assert cold.lifetime.computed > 0
 
-    warm = make_objective_engine(store_path=store_path)
+    warm = experiment_engine(store_path=store_path)
     res2 = autotune_search(bind_objective("synthetic"), budget=BUDGET,
                            driver=driver, seed=SEED, engine=warm)
     assert res2["history"] == res["history"]

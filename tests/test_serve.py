@@ -1,0 +1,309 @@
+"""Continuous-batching server + config router + deprecation shims.
+
+The serving contract: on closed batches without slot reuse the
+continuous server's greedy outputs are bit-identical to the retained
+lockstep reference (per-slot positions coincide with the shared
+position, and the generalized mask keeps the numerics bitwise
+unchanged).  Off that regime the continuous server must do strictly
+better — mid-flight admission at correct positions, per-slot
+truncation, recurrent-state reset on slot reuse — exactly where the
+lockstep loop was wrong or wasteful.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.core.objectives import EvalFailure, bind_objective
+from repro.core.registry import get_method
+from repro.exp import experiment_engine, make_engine, make_objective_engine
+from repro.exp.runners import drive_units
+from repro.models.blocks import ModelOpts
+from repro.models.model import build_model
+from repro.multicloud import build_dataset
+from repro.multicloud.market import MarketClock, get_overlay
+from repro.runtime.router import ConfigRouter
+from repro.runtime.serve import BatchedServer, LockstepServer, Request
+
+OPTS = ModelOpts(attn_chunk=32, remat="none")
+
+
+def _model(arch):
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _reqs(n, base=3, gen=5):
+    return [Request(rid=i, prompt=[1 + i, base, base + i % 3],
+                    max_new_tokens=gen) for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _model("qwen1.5-4b")
+
+
+@pytest.fixture(scope="module")
+def ssm():
+    return _model("mamba2-130m")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+# ---------------------------------------------------------------------------
+# Closed-batch bit-identity vs the lockstep reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fixture", ("dense", "ssm"))
+def test_closed_batch_bit_identical_to_lockstep(fixture, request):
+    model, params = request.getfixturevalue(fixture)
+    B = 3
+    lock = LockstepServer(model, params, batch_size=B, max_seq=64,
+                          opts=OPTS)
+    cont = BatchedServer(model, params, batch_size=B, max_seq=64,
+                         opts=OPTS)
+    ref = lock.run(_reqs(B))
+    out = cont.run(_reqs(B))
+    assert out == ref               # greedy tokens, bit-identical
+
+
+def test_partial_batch_bit_identical(dense):
+    model, params = dense
+    lock = LockstepServer(model, params, batch_size=4, max_seq=64,
+                          opts=OPTS)
+    cont = BatchedServer(model, params, batch_size=4, max_seq=64,
+                         opts=OPTS)
+    assert cont.run(_reqs(2)) == lock.run(_reqs(2))
+
+
+def test_kernel_path_matches_reference(dense):
+    model, params = dense
+    ref = BatchedServer(model, params, batch_size=2, max_seq=64,
+                        opts=OPTS, use_kernel=False)
+    ker = BatchedServer(model, params, batch_size=2, max_seq=64,
+                        opts=OPTS, use_kernel=True)
+    assert ker.use_kernel
+    assert ker.run(_reqs(4)) == ref.run(_reqs(4))
+
+
+def test_kernel_refused_for_sliding_window():
+    model, params = _model("gemma3-27b")      # sliding_window set
+    srv = BatchedServer(model, params, batch_size=2, max_seq=64,
+                        opts=OPTS, use_kernel=True)
+    assert not srv.use_kernel                 # silently forced off
+    assert len(srv.run(_reqs(2))) == 2
+
+
+# ---------------------------------------------------------------------------
+# Continuous-only behaviour: admission, truncation, slot reuse
+# ---------------------------------------------------------------------------
+def test_mid_flight_admission_position_independent(dense):
+    """A request admitted into a half-finished batch decodes at its own
+    position 0 — its output must equal serving it alone."""
+    model, params = dense
+    late = Request(rid=99, prompt=[7, 8, 9], max_new_tokens=6)
+    solo = BatchedServer(model, params, batch_size=2, max_seq=64,
+                         opts=OPTS)
+    ref = solo.run([Request(rid=99, prompt=[7, 8, 9], max_new_tokens=6)])
+
+    srv = BatchedServer(model, params, batch_size=2, max_seq=64,
+                        opts=OPTS)
+    for r in _reqs(2, gen=8):
+        srv.submit(r)
+    for _ in range(5):              # neighbours mid-generation
+        srv.step()
+    srv.submit(late)                # queued until a slot frees
+    out = srv.drain()
+    assert out[99] == ref[99]
+    assert late.arrived == 5
+    assert late.started > late.arrived      # waited for a slot
+    assert set(out) == {0, 1, 99}
+
+
+def test_per_slot_truncation_spares_neighbours(dense):
+    """KV exhaustion truncates only the offending slot; the lockstep
+    loop flushed the whole batch at S-1."""
+    model, params = dense
+    S = 24
+    long = Request(rid=0, prompt=[5, 6], max_new_tokens=100)
+    srv = BatchedServer(model, params, batch_size=2, max_seq=S, opts=OPTS)
+    srv.submit(long)
+    srv.step()                      # long occupies slot 0 first
+    short = Request(rid=1, prompt=[9, 10], max_new_tokens=4)
+    srv.submit(short)
+    out = srv.drain()
+    assert len(out[0]) < 100        # truncated at its own S-1
+    assert len(out[1]) == 4         # neighbour unaffected
+    assert not srv.queue and all(a is None for a in srv.active)
+
+
+def test_ssm_slot_reuse_resets_recurrent_state(ssm):
+    """The recurrent state must not leak across slot occupants: a
+    request served in a reused slot equals serving it alone."""
+    model, params = ssm
+    mk = lambda: Request(rid=7, prompt=[11, 12], max_new_tokens=5)
+    solo = BatchedServer(model, params, batch_size=1, max_seq=64,
+                         opts=ModelOpts(remat="none"))
+    ref = solo.run([mk()])
+    srv = BatchedServer(model, params, batch_size=1, max_seq=64,
+                        opts=ModelOpts(remat="none"))
+    srv.run([Request(rid=0, prompt=[3, 4, 5], max_new_tokens=6)])
+    assert srv.run([mk()]) == ref   # second occupancy of the same slot
+
+
+def test_streaming_api_finish_order_and_bookkeeping(dense):
+    model, params = dense
+    srv = BatchedServer(model, params, batch_size=2, max_seq=64, opts=OPTS)
+    a = Request(rid=0, prompt=[2, 3], max_new_tokens=2)
+    b = Request(rid=1, prompt=[4, 5], max_new_tokens=9)
+    srv.submit(a), srv.submit(b)
+    finished = []
+    while srv.queue or any(s is not None for s in srv.active):
+        finished.extend(srv.step())
+    assert [r.rid for r in finished] == [0, 1]      # streamed as they end
+    assert a.done and b.done
+    assert a.finished < b.finished
+    assert srv.results[0] == a.output
+
+
+def test_fallback_family_serves_via_lockstep():
+    model, params = _model("zamba2-7b")       # hybrid: no per-slot path
+    srv = BatchedServer(model, params, batch_size=2, max_seq=64,
+                        opts=ModelOpts(attn_chunk=32, remat="none"))
+    assert not srv.continuous
+    with pytest.raises(RuntimeError, match="lockstep fallback"):
+        srv.submit(_reqs(1)[0])
+    assert len(srv.run(_reqs(2))) == 2
+
+
+# ---------------------------------------------------------------------------
+# Config router: tell plumbing + outage-mid-serve
+# ---------------------------------------------------------------------------
+def _register(router, ds, w, budget=12, seed=0, method="random"):
+    drv = get_method(method).make_driver(ds.domain, budget, seed,
+                                         target="cost")
+    router.register(w, drv, binding=bind_objective(
+        "offline", workload=w, target="cost", dataset_seed=int(ds.seed)))
+    return drv
+
+
+def test_router_observed_latency_reaches_driver(ds):
+    router = ConfigRouter()
+    w = ds.workloads[0]
+    drv = _register(router, ds, w)
+    d = router.route(w)
+    assert d.kind == "explore"
+    router.observe(d, 0.125)
+    # a completed ask batch is told to the driver verbatim
+    if len(drv.history):
+        assert drv.history.values[-1] == 0.125
+    else:                           # batch > 1: finish the round
+        while True:
+            d = router.route(w)
+            if d.kind != "explore":
+                break
+            router.observe(d, 0.125)
+        assert 0.125 in drv.history.values
+    assert router.stats(w)["observed"] >= 1
+
+
+def test_router_serves_incumbent_after_budget(ds):
+    router = ConfigRouter()
+    w = ds.workloads[0]
+    task = ds.task(w, "cost")
+    drv = _register(router, ds, w, budget=6)
+    while True:
+        d = router.route(w)
+        if d.kind != "explore":
+            break
+        router.observe(d, task.objective(d.provider, d.config))
+    assert drv.done
+    assert d.kind == "exploit"
+    best = router.best(w)
+    assert best is not None
+    assert task.objective(*best) == min(drv.history.values)
+
+
+def test_router_outage_mid_serve_never_aborts(ds):
+    """The fig5 outage scenario replayed through the serving control
+    plane: the dead provider is never routed to while down, the outage
+    lands as structured failure tells, and service continues."""
+    overlay = get_overlay(0, 40, 0.0, "outage:aws:0:20")
+    clock = MarketClock()
+    router = ConfigRouter(overlay=overlay, clock=clock)
+    w = ds.workloads[1]
+    task = ds.task(w, "cost")
+    drv = _register(router, ds, w, budget=30, method="cb_rbfopt")
+    served = []
+    for _ in range(25):
+        d = router.route(w)
+        served.append(d)
+        router.observe(d, task.objective(d.provider, d.config))
+    assert all(d.provider != "aws" for d in served if d.tick < 20)
+    assert drv.failures             # the outage was felt as data...
+    assert len(served) == 25        # ...never as an abort
+    stats = router.stats(w)
+    assert stats["failovers"] >= len(drv.failures)
+    assert stats["told"] == len(drv.history)
+
+
+def test_router_observe_rejects_junk(ds):
+    router = ConfigRouter()
+    w = ds.workloads[0]
+    _register(router, ds, w)
+    d = router.route(w)
+    with pytest.raises(ValueError, match="finite"):
+        router.observe(d, float("nan"))
+    router.observe(d, EvalFailure(reason="backend died"))  # allowed
+    with pytest.raises(KeyError, match="no driver registered"):
+        router.route("no-such-workload")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn, but reproduce the new path exactly
+# ---------------------------------------------------------------------------
+def test_engine_factory_shims_warn_and_match(ds, tmp_path):
+    new = experiment_engine(dataset=ds, store_path=str(tmp_path / "a.jsonl"))
+    with pytest.warns(DeprecationWarning, match="make_engine"):
+        old = make_engine(ds, store_path=str(tmp_path / "b.jsonl"))
+    assert old.context == new.context
+    with pytest.warns(DeprecationWarning, match="make_objective_engine"):
+        old2 = make_objective_engine(context={"dataset_seed": ds.seed})
+    assert old2.context == {"dataset_seed": ds.seed}
+    for eng in (new, old):          # both paths must actually run units
+        drv = get_method("random").make_driver(ds.domain, 3, 0)
+        binding = bind_objective("offline", workload=ds.workloads[0],
+                                 target="cost", dataset_seed=int(ds.seed))
+        (hist,) = drive_units(eng, [(drv, binding)])
+        assert len(hist) == 3
+    assert old.store.path != new.store.path     # wiring preserved
+
+
+def test_drive_units_triple_shim_warns_and_matches(ds):
+    w, t = ds.workloads[0], "cost"
+    engine = experiment_engine(dataset=ds)
+    pair_drv = get_method("random").make_driver(ds.domain, 5, 0, target=t)
+    binding = bind_objective("offline", workload=w, target=t,
+                             dataset_seed=int(ds.seed))
+    (pair_hist,) = drive_units(engine, [(pair_drv, binding)])
+
+    triple_drv = get_method("random").make_driver(ds.domain, 5, 0, target=t)
+    with pytest.warns(DeprecationWarning, match="triples are deprecated"):
+        (triple_hist,) = drive_units(engine, [(triple_drv, w, t)])
+    assert triple_hist.points == pair_hist.points
+    assert triple_hist.values == pair_hist.values
+
+
+def test_pair_form_emits_no_deprecation_warning(ds):
+    engine = experiment_engine(dataset=ds)
+    drv = get_method("random").make_driver(ds.domain, 3, 0, target="cost")
+    binding = bind_objective("offline", workload=ds.workloads[0],
+                             target="cost", dataset_seed=int(ds.seed))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        drive_units(engine, [(drv, binding)])

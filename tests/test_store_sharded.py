@@ -12,7 +12,7 @@ import sys
 import pytest
 
 from repro.exp import (
-    ResultStore, ShardedResultStore, make_engine, merge_stores, open_store,
+    ResultStore, ShardedResultStore, experiment_engine, merge_stores, open_store,
     regret_curves, unit_key)
 from repro.multicloud.dataset import build_dataset
 
@@ -430,7 +430,7 @@ def test_merge_is_order_insensitive_for_content(tmp_path):
 # ---------------------------------------------------------------------------
 def _sweep_worker(root, methods, workloads):
     ds = build_dataset()
-    engine = make_engine(ds, store=ShardedResultStore(root))
+    engine = experiment_engine(dataset=ds, store=ShardedResultStore(root))
     regret_curves(ds, methods, BUDGETS, SEEDS, "cost", workloads,
                   engine=engine)
 
@@ -458,13 +458,13 @@ def test_multiwriter_merge_replays_bit_identically(ds, workloads, tmp_path):
 
     # single-writer single-file reference run
     ref_path = str(tmp_path / "ref.jsonl")
-    ref_engine = make_engine(ds, store_path=ref_path)
+    ref_engine = experiment_engine(dataset=ds, store_path=ref_path)
     ref = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
                         engine=ref_engine)
     assert ref_engine.stats.computed > 0
 
     # replay from the merged store: zero recompute, bit-identical curves
-    replay_engine = make_engine(ds, store=open_store(merged))
+    replay_engine = experiment_engine(dataset=ds, store=open_store(merged))
     replay = regret_curves(ds, METHODS, BUDGETS, SEEDS, "cost", workloads,
                            engine=replay_engine)
     assert replay_engine.stats.computed == 0

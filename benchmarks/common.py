@@ -65,7 +65,9 @@ def report_engine(name: str, engine) -> None:
     lt = engine.lifetime
     print(f"[exp] {name}: units={lt.total} unique={lt.unique} "
           f"cached={lt.cached} computed={lt.computed} failed={lt.failed} "
-          f"failures={len(lt.failures)} retried={lt.retried}",
+          f"failures={len(lt.failures)} retried={lt.retried} "
+          f"speculated={lt.speculated} spec_hits={lt.spec_hits} "
+          f"spec_wasted={lt.spec_wasted}",
           file=sys.stderr, flush=True)
     for failure in lt.failures:
         print(f"[exp] {name}: FAILED unit {failure}", file=sys.stderr,

@@ -1,0 +1,231 @@
+"""Fig. 8 — scheduler makespan: pipelined dispatch vs. the barrier loop.
+
+A mixed-rung workload built to expose the barrier loop's structural
+waste: eighteen batch-1 flat chains (``smac``/``random`` at distinct
+seeds, each on its own cohort — the sweep shape, where distinct
+workloads share no units) over a synthetic 192-point domain whose
+ground-truth objective sleeps ~60ms per eval — more chains than the
+executor's slot count, so every barrier round pays two full waves for
+just over one wave's worth of work —
+plus both multi-fidelity drivers over a ladder whose bottom rung is a
+~2ms probe (lane-coalesced by the pipelined scheduler) under the same
+ground truth.  The barrier loop pays ``rounds x ceil(cells/slots)``
+waves; the pipelined scheduler re-asks each cell the moment its own
+batch resolves, packing truths longest-cost-first and back-filling
+slots with probe lanes, so it pays ~``total work / slots``.
+
+The objectives are deterministic (value = content hash of the point),
+evaluate by worker-importable ref, and sleep scaled down under
+``--quick`` — so driver traces, history digests, and the CSV are
+bit-identical across modes, executors, and machines; only wall-clock
+differs.  Each run gates on the scheduler's core contract before
+reporting a speedup: pipelined histories and store fingerprints equal
+the barrier loop's at equal executor slots, and a warm rerun over the
+pipelined store replays everything (``computed=0``).  Wall-clock lands
+in ``BENCH_sched.json`` and stderr only, never the CSV.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import ROOT, check_methods_registered, emit, \
+    report_engine, write_rows
+from repro.core.domain import Domain, ParamSpace, ProviderSpace
+from repro.core.fidelity import bind_ladder
+from repro.core.objectives import bind_objective, objective_names, \
+    register_objective
+from repro.core.registry import get_method
+from repro.exp import experiment_engine
+from repro.exp.runners import drive_units
+from repro.exp.store import ResultStore
+
+NAME = "fig8_sched"
+BENCH_PATH = os.path.join(ROOT, "BENCH_sched.json")
+#: (method, binding kind, budget, seed) — eighteen batch-1 truth chains
+#: (more than the default slot count, so every barrier round pays two
+#: waves for just over one wave's worth of work) plus both
+#: multi-fidelity drivers sweeping the 2ms probe rung with a small
+#: truth budget
+CELLS = tuple(
+    [("smac", "flat", 12, s) for s in range(5)]
+    + [("random", "flat", 12, s) for s in range(5, 18)]
+    + [("mf_sh", "ladder", 4, 0), ("mf_prefilter", "ladder", 4, 0)])
+TRUE_S = 0.06          # ground-truth sleep (cost_class "measure")
+PROBE_S = 0.002        # probe sleep (cost_class "analytic", lane-cheap)
+QUICK_SCALE = 0.25
+
+
+# ---------------------------------------------------------------------------
+# Synthetic sleep-backed objective family (worker-importable by ref)
+# ---------------------------------------------------------------------------
+def _point_value(provider, config, salt: str) -> float:
+    """Deterministic value in [0, 1) from the point's content — identical
+    on every host, so traces and digests are machine-independent."""
+    blob = json.dumps([provider, sorted(dict(config).items()), salt])
+    return int(hashlib.sha256(blob.encode()).hexdigest()[:12], 16) \
+        / float(16 ** 12)
+
+
+def eval_sbench_true(params, context):
+    time.sleep(TRUE_S * float(params.get("scale", 1.0)))
+    return {"value": _point_value(params["provider"], params["config"],
+                                  "true")}
+
+
+def eval_sbench_probe(params, context):
+    time.sleep(PROBE_S * float(params.get("scale", 1.0)))
+    truth = _point_value(params["provider"], params["config"], "true")
+    noise = _point_value(params["provider"], params["config"], "noise")
+    return {"value": truth * (0.8 + 0.4 * noise)}
+
+
+def _sbench_domain(params) -> Domain:
+    return Domain(providers=tuple(
+        ProviderSpace(p, (ParamSpace("knob", tuple(range(64))),))
+        for p in ("alpha", "beta", "gamma")))
+
+
+if "sbench_true" not in objective_names():
+    register_objective(
+        "sbench_probe", "benchmarks.fig8_sched:eval_sbench_probe",
+        domain_factory=_sbench_domain, params=("scale", "cohort"),
+        defaults={"scale": 1.0, "cohort": 0},
+        tags=("bench", "synthetic"),
+        family="sbench", rung=0, cost_class="analytic")
+    register_objective(
+        "sbench_true", "benchmarks.fig8_sched:eval_sbench_true",
+        domain_factory=_sbench_domain, params=("scale", "cohort"),
+        defaults={"scale": 1.0, "cohort": 0},
+        tags=("bench", "synthetic"),
+        family="sbench", cost_class="measure")
+
+
+# ---------------------------------------------------------------------------
+# Workload + gates
+# ---------------------------------------------------------------------------
+def _cells(quick: bool):
+    """Fresh drivers every call — each scheduler mode replays the same
+    deterministic searches from identical initial state."""
+    scale = QUICK_SCALE if quick else 1.0
+    ladder = bind_ladder("sbench", scale=scale)
+    domain = ladder.make_domain()
+    # flat chains carry a per-cell cohort (the sweep shape: distinct
+    # workloads share no units), so cross-cell dedup can't deflate the
+    # barrier loop's waves; the value function ignores it
+    return [(get_method(m).make_driver(domain, budget, seed),
+             ladder if kind == "ladder"
+             else bind_objective("sbench_true", scale=scale, cohort=seed))
+            for m, kind, budget, seed in CELLS]
+
+
+def _digest(hist) -> str:
+    blob = json.dumps([[p, sorted(c.items()), v]
+                       for (p, c), v in zip(hist.points, hist.values)],
+                      sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _engine(executor, slots, store, hosts=None, timeout=None, retries=0):
+    return experiment_engine(
+        store=store, executor=executor, workers=slots,
+        executor_kwargs={"hosts": hosts} if hosts else None,
+        unit_timeout_s=timeout, retries=retries,
+        local_context={"objective_modules": ("benchmarks.fig8_sched",)})
+
+
+def _timed_drive(engine, cells, **kw):
+    t0 = time.perf_counter()
+    hists = drive_units(engine, cells, **kw)
+    return ([_digest(h) for h in hists],
+            [len(h.values) for h in hists],
+            time.perf_counter() - t0)
+
+
+def run(quick: bool = False, workers: int = 16, executor: str = None,
+        hosts: str = None, timeout: float = None, retries: int = 0):
+    check_methods_registered(sorted({m for m, _, _, _ in CELLS}))
+    slots = max(2, int(workers))
+
+    # barrier reference: the legacy round loop at the same slot count
+    store_b = ResultStore(None)
+    eng_b = _engine("thread", slots, store_b)
+    with eng_b:
+        digests_b, counts_b, barrier_s = _timed_drive(
+            eng_b, _cells(quick), scheduler="barrier")
+        report_engine(f"{NAME}.barrier", eng_b)
+
+    # pipelined + speculative, cold store, CLI-selected executor
+    store_p = ResultStore(None)
+    eng_p = _engine(executor or "thread", slots, store_p, hosts=hosts,
+                    timeout=timeout, retries=retries)
+    with eng_p:
+        digests_p, _counts_p, pipe_s = _timed_drive(eng_p, _cells(quick))
+        report_engine(f"{NAME}.pipeline", eng_p)
+        lt = eng_p.lifetime
+
+    if digests_p != digests_b:
+        raise RuntimeError(
+            f"pipelined histories diverged from barrier: "
+            f"{digests_p} != {digests_b}")
+    if store_p.fingerprint() != store_b.fingerprint():
+        raise RuntimeError("pipelined store fingerprint diverged from "
+                           "barrier")
+
+    # warm rerun over the pipelined store: everything replays
+    eng_w = _engine(executor or "thread", slots, store_p, hosts=hosts,
+                    timeout=timeout, retries=retries)
+    with eng_w:
+        digests_w, _counts_w, _warm_s = _timed_drive(eng_w, _cells(quick))
+        report_engine(f"{NAME}.warm", eng_w)
+        wlt = eng_w.lifetime
+    if digests_w != digests_b:
+        raise RuntimeError("warm rerun histories diverged")
+    if wlt.computed != 0:
+        raise RuntimeError(
+            f"warm rerun recomputed {wlt.computed} unit(s)")
+
+    speedup = barrier_s / pipe_s if pipe_s > 0 else float("inf")
+    bench = {
+        "quick": bool(quick), "slots": slots,
+        "executor": executor or "thread",
+        "cells": [{"method": m, "binding": kind, "budget": b, "seed": s}
+                  for m, kind, b, s in CELLS],
+        "grid": _cells(quick)[0][1].make_domain().size(),
+        "true_unit_s": TRUE_S, "probe_unit_s": PROBE_S,
+        "barrier_s": round(barrier_s, 4),
+        "pipeline_s": round(pipe_s, 4),
+        "speedup": round(speedup, 3),
+        "speculated": lt.speculated, "spec_hits": lt.spec_hits,
+        "spec_wasted": lt.spec_wasted,
+        "histories_identical": True, "fingerprints_identical": True,
+        "warm_computed": wlt.computed, "warm_cached": wlt.cached,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[exp] {NAME}: barrier_s={barrier_s:.3f} "
+          f"pipeline_s={pipe_s:.3f} speedup={speedup:.2f}x "
+          f"identical=True warm_computed={wlt.computed}",
+          file=sys.stderr, flush=True)
+
+    # us_per_call deliberately empty and no wall-clock in derived: the
+    # CSV is bit-stable across executors, so CI diffs it verbatim
+    out = [[f"fig8.{m}.s{s}", "", f"evals={n}|digest={d[:12]}"]
+           for (m, _kind, _b, s), d, n in zip(CELLS, digests_b, counts_b)]
+    out.append(["fig8.identity", "",
+                "hists=identical|fingerprints=identical|warm_computed=0"])
+    return write_rows(NAME, ("name", "us_per_call", "derived"), out)
+
+
+def main(quick: bool = False, workers: int = 16, executor: str = None,
+         hosts: str = None, timeout: float = None, retries: int = 0) -> None:
+    emit(run(quick=quick, workers=workers, executor=executor, hosts=hosts,
+             timeout=timeout, retries=retries))
+
+
+if __name__ == "__main__":
+    main()

@@ -27,11 +27,12 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_sota, fig3_hierarchical, fig4_savings,
-                            fig5_drift, fig6_fidelity, fig7_serve, kernels,
-                            roofline, surrogates, table2_dataset)
+                            fig5_drift, fig6_fidelity, fig7_serve,
+                            fig8_sched, kernels, roofline, surrogates,
+                            table2_dataset)
     modules = [table2_dataset, fig2_sota, fig3_hierarchical, fig4_savings,
-               fig5_drift, fig6_fidelity, fig7_serve, surrogates, roofline,
-               kernels]
+               fig5_drift, fig6_fidelity, fig7_serve, fig8_sched,
+               surrogates, roofline, kernels]
     print("name,us_per_call,derived")
     ok = True
     for mod in modules:

@@ -91,6 +91,22 @@ class SearchDriver:
         """Report results for the outstanding batch, in request order."""
         raise NotImplementedError
 
+    def peek(self) -> Optional[List[EvalRequest]]:
+        """Best guess at the *next* ``ask_batch``, without mutating any
+        driver state.
+
+        The pipelined scheduler's speculative ask-ahead
+        (:mod:`repro.exp.sched`) calls this while a batch is in flight
+        and prefetches the guessed requests through idle executor
+        slots; a wrong guess costs nothing but the prefetch itself —
+        tells always replay in exact ask order, so histories stay
+        bit-identical whether or not a guess was right.  Returns
+        ``None`` when the driver has no useful guess (the default).
+        Implementations must leave the driver's observable state
+        untouched (work on copies) and may be called with or without
+        an outstanding batch."""
+        return None
+
     # ------------------------------------------------------------------
     def _begin_ask(self) -> None:
         """Protocol guard (raises, never asserts — must hold under -O):
@@ -137,6 +153,21 @@ class SearchDriver:
         return 10.0 * max(finite) if finite else 1e6
 
 
+def _ghost_ask(opt: BlackBoxOptimizer) -> Optional[Any]:
+    """``ask()`` on a deepcopy: the optimizer's next proposal assuming
+    the outstanding tells don't change its mind — exact for
+    history-blind proposers (RandomSearch's rng never sees tells), a
+    plausible guess for surrogate-driven ones.  The real optimizer is
+    never touched; any failure (e.g. an exhausted candidate set) just
+    means "no guess"."""
+    import copy
+    try:
+        ghost = copy.deepcopy(opt)
+        return ghost.candidates[ghost.ask()]
+    except Exception:           # noqa: BLE001 — a guess is best-effort
+        return None
+
+
 def drive(driver: SearchDriver,
           objective: Callable[[str, dict], float]) -> History:
     """Run a driver to completion against an inline objective — the
@@ -174,6 +205,13 @@ class FlatDriver(SearchDriver):
         idx = self.opt.ask()
         self._pending = [idx]
         return [self.opt.candidates[idx]]
+
+    def peek(self) -> Optional[List[EvalRequest]]:
+        spent = len(self.opt.history) + len(self._pending or ())
+        if spent >= self.budget:
+            return None
+        point = _ghost_ask(self.opt)
+        return None if point is None else [point]
 
     def tell_batch(self, values: Sequence[float]) -> None:
         (idx,) = self._take_pending(values)
@@ -245,6 +283,18 @@ class IndependentDriver(SearchDriver):
             self._pending.append((stream, idx))
             out.append((prov, opt.candidates[idx]))
         return out
+
+    def peek(self) -> Optional[List[EvalRequest]]:
+        asked = {id(s) for s, _i in (self._pending or ())}
+        out: List[EvalRequest] = []
+        for stream in self._streams:
+            prov, opt, b, _sh = stream
+            if b - (1 if id(stream) in asked else 0) <= 0:
+                continue
+            cfg = _ghost_ask(opt)
+            if cfg is not None:
+                out.append((prov, cfg))
+        return out or None
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)
@@ -334,6 +384,21 @@ class CloudBanditDriver(SearchDriver):
             self._pending.append((k, idx, True))
             out.append((k, o.candidates[idx]))
         return out
+
+    def peek(self) -> Optional[List[EvalRequest]]:
+        # next batch = the active arms' next pulls (same round or, if
+        # the outstanding tell closes the round, the survivors' first
+        # pulls of the next — at worst one eliminated arm is a wasted
+        # guess).  Paused-arm probes are skipped: a dark arm's eval is
+        # expected to fail, so prefetching it buys nothing.
+        if self._m > self.K:
+            return None
+        out: List[EvalRequest] = []
+        for k in self.active:
+            cfg = _ghost_ask(self.opts[k])
+            if cfg is not None:
+                out.append((k, cfg))
+        return out or None
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)
@@ -472,6 +537,19 @@ class RisingBanditsDriver(SearchDriver):
             self._pending.append((k, idx, k in self.paused))
             out.append((k, o.candidates[idx]))
         return out
+
+    def peek(self) -> Optional[List[EvalRequest]]:
+        # next sweep over the currently-active arms, truncated at the
+        # budget remaining once the outstanding batch lands
+        rem = self.budget - self.used - len(self._pending or ())
+        if rem <= 0:
+            return None
+        out: List[EvalRequest] = []
+        for k in self.active[:rem]:
+            cfg = _ghost_ask(self.opts[k])
+            if cfg is not None:
+                out.append((k, cfg))
+        return out or None
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)

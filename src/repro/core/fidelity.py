@@ -229,6 +229,21 @@ class SuccessiveHalvingDriver(SearchDriver):
         return [(self._candidates[i][0], self._candidates[i][1],
                  self._rung) for i in take]
 
+    def peek(self):
+        # the next batch is the next rung's survivor set — unknown
+        # until the in-flight rung scores, so guess its quota from the
+        # current racers in request order; promotion overlap makes a
+        # useful fraction of the prefetches land (and the rest are
+        # just discarded staging entries, never stored)
+        if self._pending is None or self._counts is None or self._done:
+            return None
+        nxt = self._rung + 1
+        if self.n_rungs is None or nxt >= self.n_rungs:
+            return None
+        guess = self._pending[:self._counts[nxt]]
+        return [(self._candidates[i][0], self._candidates[i][1], nxt)
+                for i in guess]
+
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)
         top = self._rung == self.n_rungs - 1
@@ -362,6 +377,19 @@ class PrefilterDriver(SearchDriver):
         self._pending = [e for e in entries if e["promote"]]
         return [(e["provider"], e["config"], self.n_rungs - 1)
                 for e in self._pending]
+
+    def peek(self):
+        # during warmup every probe promotes, so while the low batch is
+        # in flight the coming ground-truth batch is known exactly.
+        # Past warmup the promoted subset depends on the probes, and
+        # speculating ground truth would defeat the screening economy —
+        # no guess.
+        if self._phase is None or self.n_rungs is None:
+            return None
+        kind, payload = self._phase
+        if kind == "low" and self._asks + 1 <= self.warmup:
+            return [(p, c, self.n_rungs - 1) for p, c in payload]
+        return None
 
     def tell_batch(self, values: Sequence[float]) -> None:
         pending = self._take_pending(values)

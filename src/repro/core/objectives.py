@@ -132,6 +132,11 @@ class ObjectiveSpec:
     #: rung within the family; None = the top rung (ground truth) —
     #: the only rung whose units omit the ``fidelity`` key field
     rung: Optional[int] = None
+    #: scheduler cost hint (repro.exp.sched): a coarse class name such
+    #: as "table"/"analytic"/"compile"/"subprocess"/"measure" that seeds
+    #: the cost model's nominal estimate before any timing is observed.
+    #: Purely operational — never part of content keys or fingerprints.
+    cost_class: Optional[str] = None
 
     @property
     def is_top_rung(self) -> bool:
@@ -284,7 +289,8 @@ def register_objective(name: str,
                        context_params: Tuple[str, ...] = (),
                        tags: Tuple[str, ...] = (),
                        family: Optional[str] = None,
-                       rung: Optional[int] = None) -> ObjectiveSpec:
+                       rung: Optional[int] = None,
+                       cost_class: Optional[str] = None) -> ObjectiveSpec:
     """Register an objective family.
 
     ``evaluate`` is a ``module:qualname`` string or a module-level
@@ -300,6 +306,11 @@ def register_objective(name: str,
     ``fidelity`` field so their records never collide with real
     measurements.  A rung is meaningless without a family, and rung
     slots (including the top) are unique within a family.
+
+    ``cost_class`` is a scheduler hint (see :mod:`repro.exp.sched`):
+    objectives sharing a class share one nominal/EWMA cost estimate.
+    Omitted, the objective gets a per-name estimate learned from stored
+    unit timings.  Operational only — never part of unit identity.
     """
     if callable(evaluate):
         evaluate = _fn_ref(evaluate)
@@ -330,7 +341,7 @@ def register_objective(name: str,
         params=tuple(params),
         defaults=tuple(sorted((defaults or {}).items())),
         context_params=tuple(context_params), tags=tuple(tags),
-        family=family, rung=rung)
+        family=family, rung=rung, cost_class=cost_class)
     _REGISTRY[name] = spec
     return spec
 
@@ -530,7 +541,7 @@ def _register_builtins() -> None:
         defaults={"dataset_seed": 0},
         context_params=("dataset_seed",),
         tags=("table", "paper"),
-        family="offline", rung=None)
+        family="offline", rung=None, cost_class="table")
     # the "sharding" ladder: analytic roofline estimate (~free) ->
     # roofline-scored XLA compile (seconds) -> full dryrun (minutes)
     register_objective(
@@ -539,14 +550,14 @@ def _register_builtins() -> None:
         params=("arch", "shape", "mesh"),
         defaults={"mesh": "pod"},
         tags=("measured", "compile", "roofline"),
-        family="sharding", rung=1)
+        family="sharding", rung=1, cost_class="compile")
     register_objective(
         "dryrun", "repro.core.objectives:eval_dryrun",
         domain_factory=_sharding_domain,
         params=("arch", "shape", "mesh"),
         defaults={"mesh": "pod"},
         tags=("measured", "compile", "subprocess"),
-        family="sharding", rung=None)
+        family="sharding", rung=None, cost_class="subprocess")
     # the offline table seen through a moving market: per-request units
     # additionally carry the clock tick (see MarketOverlay / drive_units'
     # clock hook), and an outage/revocation returns the structured
@@ -559,14 +570,14 @@ def _register_builtins() -> None:
         defaults={"dataset_seed": 0, "market_seed": 0, "horizon": 64,
                   "walk_sigma": 0.0, "schedule": ""},
         context_params=("dataset_seed",),
-        tags=("dynamic", "market"))
+        tags=("dynamic", "market"), cost_class="table")
     register_objective(
         "hlo_cost", "repro.tuner.objective:eval_sharding_analytic",
         domain_factory=_sharding_domain,
         params=("arch", "shape", "mesh"),
         defaults={"mesh": "pod"},
         tags=("analytic", "roofline"),
-        family="sharding", rung=0)
+        family="sharding", rung=0, cost_class="analytic")
     register_objective(
         "offline_proxy", "repro.core.objectives:eval_offline_proxy",
         domain_factory=_offline_domain,
@@ -574,7 +585,7 @@ def _register_builtins() -> None:
         defaults={"dataset_seed": 0, "proxy_sigma": 0.25},
         context_params=("dataset_seed",),
         tags=("proxy", "paper"),
-        family="offline", rung=0)
+        family="offline", rung=0, cost_class="table")
     # the "kernel" ladder: analytic traffic/grid model -> measured
     # wall time of the pallas kernels (repro.kernels.bench)
     register_objective(
@@ -583,11 +594,11 @@ def _register_builtins() -> None:
         params=("preset",),
         defaults={"preset": "small"},
         tags=("analytic", "kernel"),
-        family="kernel", rung=0)
+        family="kernel", rung=0, cost_class="analytic")
     register_objective(
         "kernel_time", "repro.kernels.bench:eval_kernel_time",
         domain_factory=_kernel_domain,
         params=("preset", "reps"),
         defaults={"preset": "small", "reps": 5},
         tags=("timing", "kernel"),
-        family="kernel", rung=None)
+        family="kernel", rung=None, cost_class="measure")

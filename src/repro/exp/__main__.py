@@ -121,10 +121,43 @@ def _cmd_stat(args: argparse.Namespace) -> int:
     print(f"{args.store}: {len(store)} records")
     for kind, n in sorted(kinds.items()):
         print(f"  {kind}: {n}")
+    _stat_eval_timing(store)
     for path in store.load_errors:
         print(f"  UNREADABLE shard skipped: {path}", file=sys.stderr)
     print(f"fingerprint: {store.fingerprint()}")
     return 0
+
+
+def _stat_eval_timing(store) -> None:
+    """Per-cost-class / per-rung timing breakdown over stored ``eval``
+    records — the same timings the pipelined scheduler's cost model
+    seeds its estimates from, so this is the operator's view of what
+    the packer sees."""
+    from repro.core.objectives import DEFAULT_OBJECTIVE, get_objective
+    groups: dict = {}
+    for rec in store.records():
+        if rec.get("kind") != "eval":
+            continue
+        params = rec.get("params") or {}
+        obj = str(params.get("objective", DEFAULT_OBJECTIVE))
+        fid = params.get("fidelity")
+        try:
+            cls = get_objective(obj).cost_class or "-"
+        except KeyError:
+            cls = "-"
+        key = (cls, obj, "-" if fid is None else str(fid))
+        n, tot = groups.get(key, (0, 0.0))
+        groups[key] = (n + 1, tot + float(rec.get("elapsed_s", 0.0)))
+    if not groups:
+        return
+    print("  eval timing by cost class / objective / rung:")
+    rows = [(cls, obj, fid, n, tot, tot / n)
+            for (cls, obj, fid), (n, tot) in sorted(groups.items())]
+    w_cls = max(len(r[0]) for r in rows)
+    w_obj = max(len(r[1]) for r in rows)
+    for cls, obj, fid, n, tot, mean in rows:
+        print(f"    {cls:<{w_cls}}  {obj:<{w_obj}}  rung={fid:<2} "
+              f" n={n:<6} mean={mean:.4f}s total={tot:.2f}s")
 
 
 def _cmd_methods(args: argparse.Namespace) -> int:

@@ -62,6 +62,12 @@ class EngineStats:
     computed: int = 0       # unique units actually executed
     failed: int = 0         # unique units whose budget was exhausted
     retried: int = 0        # retry attempts spent (beyond first tries)
+    #: speculative ask-ahead counters (repro.exp.sched): prefetches
+    #: dispatched, prefetched results a later real ask actually used,
+    #: and prefetches discarded unused (wrong guesses + failed attempts)
+    speculated: int = 0
+    spec_hits: int = 0
+    spec_wasted: int = 0
     elapsed_s: float = 0.0  # wall time of this run() call
     #: sum of per-unit compute time as recorded when each unit was first
     #: executed — stable across store replays (unlike wall time)

@@ -80,6 +80,13 @@ class BaseExecutor:
     #: instead of building a fresh one per run.
     persistent = False
 
+    @property
+    def slots(self) -> int:
+        """Usable parallel capacity — what cost-aware schedulers size
+        their packing and speculation budgets against.  Pool backends
+        report their worker count; serial is 1."""
+        return max(1, int(getattr(self, "workers", 1) or 1))
+
     def submit(self, fn: Callable[..., Any], /, *args: Any,
                **kwargs: Any) -> Future:
         raise NotImplementedError
@@ -470,6 +477,12 @@ class RemoteExecutor(_TrackedExecutor):
 
     name = "remote"
     persistent = True                   # engine keeps it across run() calls
+
+    @property
+    def slots(self) -> int:
+        """Live worker connections (each runs one task at a time)."""
+        with self._lock:
+            return max(1, len(self._conns))
 
     def __init__(self, workers: int = 1, hosts: HostsSpec = None,
                  python: Optional[str] = None, heartbeat_s: float = 2.0,

@@ -160,7 +160,8 @@ def _request_unit(binding: Any, req: Sequence) -> WorkUnit:
 def drive_units(engine: ExperimentEngine,
                 cells: Sequence[DriveCell], *,
                 clock: Any = None, on_failure: str = "raise",
-                observer: Any = None) -> List[Any]:
+                observer: Any = None, scheduler: str = "pipeline",
+                speculate: bool = True) -> List[Any]:
     """Run suspendable search drivers to completion at evaluation
     granularity.
 
@@ -205,6 +206,16 @@ def drive_units(engine: ExperimentEngine,
     before they are told — the per-round trace hook fig5's dynamic
     regret is computed from.
 
+    ``scheduler`` selects the execution strategy.  ``"pipeline"`` (the
+    default) routes through :mod:`repro.exp.sched`: units are packed
+    onto executor slots longest-cost-first with cheap probes coalesced
+    into in-process lanes, each driver is told (and re-asked) the
+    moment its own batch resolves, and — without a clock — idle slots
+    prefetch :meth:`~repro.core.drivers.SearchDriver.peek` guesses
+    (disable with ``speculate=False``).  Driver histories and store
+    fingerprints are bit-identical to ``"barrier"``, the legacy
+    round-synchronized loop kept as the reference baseline.
+
     Returns one :class:`~repro.core.optimizers.base.History` per cell.
     On return ``engine.stats`` holds the totals accumulated over all
     rounds of this call (``engine.lifetime`` accumulates as usual).
@@ -212,8 +223,9 @@ def drive_units(engine: ExperimentEngine,
     if on_failure not in ("raise", "tell"):
         raise ValueError(
             f"on_failure must be 'raise' or 'tell', got {on_failure!r}")
-    # lazy: keeps `import repro.exp` light for workers/CLI processes
-    from repro.core.objectives import EvalFailure
+    if scheduler not in ("pipeline", "barrier"):
+        raise ValueError(
+            f"scheduler must be 'pipeline' or 'barrier', got {scheduler!r}")
     pairs = _normalize_cells(engine, cells)
     # fidelity handshake: a driver exposing attach_ladder learns the
     # ladder shape before its first ask; against a flat binding it is
@@ -222,6 +234,26 @@ def drive_units(engine: ExperimentEngine,
         attach = getattr(drv, "attach_ladder", None)
         if attach is not None:
             attach(getattr(binding, "n_rungs", 1))
+    if scheduler == "pipeline":
+        # lazy: sched imports back from this module
+        from repro.exp.sched import PipelinedDriveSession
+        return PipelinedDriveSession(
+            engine, pairs, clock=clock, on_failure=on_failure,
+            observer=observer, speculate=speculate).run()
+    return _drive_barrier(engine, pairs, clock=clock,
+                          on_failure=on_failure, observer=observer)
+
+
+def _drive_barrier(engine: ExperimentEngine,
+                   pairs: Sequence[Tuple[Any, Any]], *,
+                   clock: Any = None, on_failure: str = "raise",
+                   observer: Any = None) -> List[Any]:
+    """The legacy round-synchronized loop: every active driver asks,
+    the union runs as one barrier, every driver is told.  Kept as the
+    reference baseline the pipelined scheduler must stay bit-identical
+    to (benchmarks and CI diff against it)."""
+    # lazy: keeps `import repro.exp` light for workers/CLI processes
+    from repro.core.objectives import EvalFailure
     agg = EngineStats()
     pending: Dict[int, list] = {}
     active = [i for i, (drv, _b) in enumerate(pairs) if not drv.done]

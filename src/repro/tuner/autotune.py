@@ -266,7 +266,9 @@ def main() -> None:
     # benchmarks'): a warm store replays every evaluation => computed=0
     print(f"[exp] autotune: units={lt.total} unique={lt.unique} "
           f"cached={lt.cached} computed={lt.computed} failed={lt.failed} "
-          f"failures={len(lt.failures)} retried={lt.retried}",
+          f"failures={len(lt.failures)} retried={lt.retried} "
+          f"speculated={lt.speculated} spec_hits={lt.spec_hits} "
+          f"spec_wasted={lt.spec_wasted}",
           file=sys.stderr, flush=True)
     print(json.dumps({k: v for k, v in result.items() if k != "history"},
                      indent=2, default=str))

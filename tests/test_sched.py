@@ -1,0 +1,310 @@
+"""Cost-aware pipelined scheduler: bit-identity, speculation, faults.
+
+The contracts under test:
+
+- The pipelined scheduler (the ``drive_units`` default) produces driver
+  histories AND store fingerprints bit-identical to the legacy barrier
+  loop — per method (flat, bandit, drift-aware, multi-fidelity), on
+  serial and threaded executors, from cold and warm stores.
+- Speculative ask-ahead is invisible: tell order, observer traces, and
+  market-clock ticks are identical with speculation on and off (and
+  speculation is structurally disabled under a clock — a prefetched key
+  would carry the wrong tick).
+- A failed speculative unit is silently discarded: it never surfaces as
+  a spurious ``EvalFailure`` tell, never lands in ``stats.failures``,
+  and never aborts the drive.
+- The cost model seeds estimates from ``cost_class`` hints and falls
+  back to measured EWMAs for unhinted objectives.
+"""
+import pytest
+
+from repro.core.fidelity import bind_ladder
+from repro.core.objectives import (
+    EvalFailure, bind_objective, register_objective)
+from repro.core.registry import get_method
+from repro.exp import experiment_engine
+from repro.exp.engine import WorkUnit
+from repro.exp.runners import drive_units
+from repro.exp.sched import (
+    CHEAP_THRESHOLD_S, NOMINAL_COST_S, CostModel, cost_key)
+from repro.multicloud import build_dataset
+from repro.multicloud.market import MarketClock
+
+BUDGET = 22
+SEED = 3
+
+#: (method, binding kind) — every driver family the scheduler must stay
+#: bit-identical on: flat batch-1, per-provider streams, bandits, the
+#: drift-aware variants, and both multi-fidelity drivers
+METHODS = (
+    ("random", "flat"), ("smac", "flat"), ("cherrypick_x3", "flat"),
+    ("rb", "flat"), ("cb_rbfopt", "flat"), ("cb_drift", "flat"),
+    ("rb_drift", "flat"), ("mf_sh", "ladder"), ("mf_prefilter", "ladder"),
+)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return build_dataset()
+
+
+def _engine(tmp_path, name, dataset_seed, **kw):
+    return experiment_engine(context={"dataset_seed": dataset_seed},
+                             store_path=str(tmp_path / name), **kw)
+
+
+def _cell(method, kind, ds):
+    drv = get_method(method).make_driver(ds.domain, BUDGET, SEED,
+                                         target="cost")
+    if kind == "ladder":
+        binding = bind_ladder("offline", workload=ds.workloads[0],
+                              target="cost", dataset_seed=int(ds.seed))
+    else:
+        binding = bind_objective("offline", workload=ds.workloads[0],
+                                 target="cost", dataset_seed=int(ds.seed))
+    return drv, binding
+
+
+def _trace(drv):
+    h = drv.history
+    return [(p, tuple(sorted(c.items())), v)
+            for (p, c), v in zip(h.points, h.values)]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: pipelined == barrier, serial/thread x cold/warm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ("serial", "thread"))
+@pytest.mark.parametrize("method,kind", METHODS)
+def test_pipeline_bit_identical_to_barrier(method, kind, executor, ds,
+                                           tmp_path):
+    seed = int(ds.seed)
+    drv_b, binding = _cell(method, kind, ds)
+    eng_b = _engine(tmp_path, "barrier.jsonl", seed)
+    drive_units(eng_b, [(drv_b, binding)], scheduler="barrier")
+
+    drv_p, _ = _cell(method, kind, ds)
+    eng_p = _engine(tmp_path, f"pipe-{executor}.jsonl", seed,
+                    executor=executor, workers=4)
+    drive_units(eng_p, [(drv_p, binding)])
+    assert _trace(drv_p) == _trace(drv_b)
+    assert eng_p.store.fingerprint() == eng_b.store.fingerprint()
+    assert eng_p.lifetime.computed > 0
+
+    # warm: a fresh engine over the pipelined store replays everything
+    drv_w, _ = _cell(method, kind, ds)
+    eng_w = _engine(tmp_path, f"pipe-{executor}.jsonl", seed,
+                    executor=executor, workers=4)
+    drive_units(eng_w, [(drv_w, binding)])
+    assert _trace(drv_w) == _trace(drv_b)
+    assert eng_w.lifetime.computed == 0
+    assert eng_w.lifetime.cached > 0
+    # a warm run never prefetches: every key it wants is stored already
+    assert eng_w.lifetime.speculated == 0
+
+
+def test_pipeline_multi_cell_shared_units_stay_deduped(ds, tmp_path):
+    """Cross-cell coalescing: concurrent cells wanting one key compute
+    it once, and never more units than the grid exist."""
+    seed = int(ds.seed)
+    binding = bind_objective("offline", workload=ds.workloads[0],
+                             target="cost", dataset_seed=seed)
+    cells = [(get_method(m).make_driver(ds.domain, b, s, target="cost"),
+              binding)
+             for m in ("random", "smac", "rb") for s in (0, 1)
+             for b in (11, 22)]
+    eng = _engine(tmp_path, "multi.jsonl", seed, executor="thread",
+                  workers=4)
+    drive_units(eng, cells)
+    assert eng.lifetime.computed <= ds.domain.size()
+    assert eng.lifetime.total > eng.lifetime.computed
+
+
+# ---------------------------------------------------------------------------
+# speculation is invisible: tell order, traces, market-clock ticks
+# ---------------------------------------------------------------------------
+def _observed_run(ds, tmp_path, name, *, speculate, clock=None):
+    seed = int(ds.seed)
+    cells = []
+    for m in ("random", "cb_rbfopt"):
+        drv, binding = _cell(m, "flat", ds)
+        cells.append((drv, binding))
+    trace = []
+
+    def obs(i, tick, batch, values):
+        trace.append((i, tick,
+                      [(p, tuple(sorted(c.items()))) for p, c in
+                       (req[:2] for req in batch)],
+                      [v if not isinstance(v, EvalFailure) else "FAIL"
+                       for v in values]))
+
+    eng = _engine(tmp_path, name, seed, executor="thread", workers=4)
+    hists = drive_units(eng, cells, observer=obs, speculate=speculate,
+                        clock=clock)
+    return trace, [(h.points, h.values) for h in hists], eng
+
+
+def test_speculation_never_alters_tell_order(ds, tmp_path):
+    t_off, h_off, _ = _observed_run(ds, tmp_path, "spec-off.jsonl",
+                                    speculate=False)
+    t_on, h_on, eng = _observed_run(ds, tmp_path, "spec-on.jsonl",
+                                    speculate=True)
+    assert h_on == h_off
+    assert sorted(t_on) == sorted(t_off)
+    # per-cell observer order is the tell order — exactly preserved
+    for i in range(2):
+        assert [e for e in t_on if e[0] == i] \
+            == [e for e in t_off if e[0] == i]
+
+
+def test_clock_mode_disables_speculation_and_keeps_ticks(ds, tmp_path):
+    clock_b, clock_p = MarketClock(), MarketClock()
+    seed = int(ds.seed)
+    binding = bind_objective("offline", workload=ds.workloads[0],
+                             target="cost", dataset_seed=seed)
+
+    drv_b, _ = _cell("cb_rbfopt", "flat", ds)
+    trace_b = []
+    eng_b = _engine(tmp_path, "clk-barrier.jsonl", seed)
+    drive_units(eng_b, [(drv_b, binding)], clock=clock_b,
+                scheduler="barrier",
+                observer=lambda i, t, b, v: trace_b.append((i, t, list(v))))
+
+    drv_p, _ = _cell("cb_rbfopt", "flat", ds)
+    trace_p = []
+    eng_p = _engine(tmp_path, "clk-pipe.jsonl", seed, executor="thread",
+                    workers=4)
+    drive_units(eng_p, [(drv_p, binding)], clock=clock_p, speculate=True,
+                observer=lambda i, t, b, v: trace_p.append((i, t, list(v))))
+
+    assert clock_p.tick == clock_b.tick
+    assert trace_p == trace_b
+    assert _trace(drv_p) == _trace(drv_b)
+    # a prefetched unit would carry the wrong tick: structurally off
+    assert eng_p.lifetime.speculated == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injection: failed speculative units vanish without a trace
+# ---------------------------------------------------------------------------
+POISON_KNOB = 99
+
+
+def eval_sched_fault(params, context):
+    cfg = dict(params["config"])
+    if int(cfg["knob"]) == POISON_KNOB:
+        raise RuntimeError("poisoned speculative unit")
+    return {"value": float(cfg["knob"])}
+
+
+register_objective(
+    "sched_fault", eval_sched_fault,
+    domain_factory=lambda params: None, tags=("test",))
+
+
+class _ScriptedDriver:
+    """Asks good points one at a time; peeks a poisoned guess the driver
+    itself will never ask for."""
+
+    def __init__(self, knobs, poison_peek=True):
+        self._plan = [("p", {"knob": k}) for k in knobs]
+        self._idx = 0
+        self._pending = None
+        self.poison_peek = poison_peek
+        self.told = []
+        from repro.core.optimizers.base import History
+        self.history = History()
+
+    @property
+    def done(self):
+        return self._pending is None and self._idx >= len(self._plan)
+
+    def ask_batch(self):
+        self._pending = [self._plan[self._idx]]
+        self._idx += 1
+        return list(self._pending)
+
+    def tell_batch(self, values):
+        (pt,), self._pending = self._pending, None
+        self.told.extend(values)
+        if not isinstance(values[0], EvalFailure):
+            self.history.append(pt, values[0])
+
+    def peek(self):
+        if self.poison_peek:
+            return [("p", {"knob": POISON_KNOB})]
+        return None
+
+
+def test_failed_speculative_unit_never_tells_evalfailure(tmp_path):
+    binding = bind_objective("sched_fault")
+    drv = _ScriptedDriver(knobs=(1, 2, 3))
+    eng = experiment_engine(store_path=str(tmp_path / "fault.jsonl"),
+                            executor="thread", workers=4, retries=0)
+    (hist,) = drive_units(eng, [(drv, binding)], on_failure="tell")
+    # every tell is the real value; the poisoned prefetch died silently
+    assert drv.told == [1.0, 2.0, 3.0]
+    assert not any(isinstance(v, EvalFailure) for v in drv.told)
+    assert eng.lifetime.failed == 0
+    assert eng.lifetime.failures == []
+    assert eng.lifetime.errors == []
+    # nothing speculative ever reached the store
+    import json
+    stored = [json.loads(line)["params"]["config"]
+              for line in open(tmp_path / "fault.jsonl")]
+    assert all(dict(c)["knob"] != POISON_KNOB for c in stored)
+
+
+def test_adopted_speculative_failure_follows_real_path(tmp_path):
+    """If the driver *does* ask for a point whose speculative attempt
+    failed, the unit is recomputed on the real path (fresh retry
+    budget) — here it fails again and surfaces as a normal failure."""
+    binding = bind_objective("sched_fault")
+    drv = _ScriptedDriver(knobs=(1, POISON_KNOB))
+    eng = experiment_engine(store_path=str(tmp_path / "fault2.jsonl"),
+                            executor="thread", workers=4, retries=0)
+    drive_units(eng, [(drv, binding)], on_failure="tell")
+    assert drv.told[0] == 1.0
+    assert isinstance(drv.told[1], EvalFailure)
+    assert eng.lifetime.failed == 1
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+def test_cost_key_and_nominal_estimates():
+    offline = WorkUnit.make("eval", workload="w", target="cost",
+                            provider="aws", config=())
+    assert cost_key(offline.as_dict()) == "table"
+    dry = WorkUnit.make("eval", objective="dryrun", arch="a")
+    assert cost_key(dry.as_dict()) == "subprocess"
+    cm = CostModel()
+    assert cm.estimate(offline) == NOMINAL_COST_S["table"]
+    assert cm.is_cheap(offline)
+    assert cm.estimate(dry) == NOMINAL_COST_S["subprocess"]
+    assert not cm.is_cheap(dry)
+    # unhinted objective: name(@rung) keys the measured fallback
+    odd = WorkUnit.make("eval", objective="no_such_objective",
+                        fidelity=1, x=1)
+    assert cost_key(odd.as_dict()) == "no_such_objective@r1"
+    assert cm.estimate(odd) == 1.0
+
+
+def test_cost_model_ewma_and_store_seeding(tmp_path):
+    u = WorkUnit.make("eval", objective="sched_fault", knob=1)
+    cm = CostModel()
+    cm.observe(u, 10.0)
+    assert cm.estimate(u) == 10.0           # first observation wins
+    cm.observe(u, 0.0)
+    assert 0.0 < cm.estimate(u) < 10.0      # EWMA, not replacement
+    assert not cm.is_cheap(u)
+
+    # measured timings in a store seed the model for unhinted objectives
+    eng = experiment_engine(store_path=str(tmp_path / "seed.jsonl"))
+    drv = _ScriptedDriver(knobs=(1, 2), poison_peek=False)
+    drive_units(eng, [(drv, bind_objective("sched_fault"))])
+    seeded = CostModel(eng.store)
+    est = seeded.estimate(
+        WorkUnit.make("eval", objective="sched_fault",
+                      config=(("knob", 1),)))
+    assert est <= CHEAP_THRESHOLD_S         # sub-ms evals measured cheap
